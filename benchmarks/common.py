@@ -1,0 +1,76 @@
+"""Shared benchmark scaffolding: the simulated cluster every paper-figure
+benchmark runs against, scaled to this container (1 core).
+
+The paper simulates 12,500 machines for 24 h; we default to a 1,536-machine
+(2-pod) cluster over 1,800 s and report *relative* improvements (the paper's
+own claims are ratios/deltas: +13.4%, +42%, 1.79x, 1.16x) — DESIGN.md D5.
+Set REPRO_BENCH_SCALE=paper for the full-size run.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+from repro.core import latency, simulator, topology, workload
+from repro.core.policy import PolicyParams
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+
+if SCALE == "paper":
+    N_MACHINES, DURATION_S, UTIL = 12_500, 86_400, 0.6
+    MPR, RPP = 48, 16  # paper topology
+elif SCALE == "medium":
+    N_MACHINES, DURATION_S, UTIL = 768, 900, 0.75
+    MPR, RPP = 16, 4
+else:  # small (default for the 1-core container)
+    N_MACHINES, DURATION_S, UTIL = 256, 420, 0.7
+    # Scaled-down fat-tree that preserves the paper's tier structure
+    # (multiple racks per pod, multiple pods) at 1/50 the machine count.
+    MPR, RPP = 16, 4
+
+SEED = 42
+
+
+@functools.lru_cache(maxsize=1)
+def cluster():
+    topo = topology.Topology(
+        n_machines=N_MACHINES, machines_per_rack=MPR, racks_per_pod=RPP,
+        slots_per_machine=4,
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=DURATION_S, seed=SEED)
+    wl = workload.synth_workload(
+        topo, duration_s=DURATION_S, seed=SEED, target_utilisation=UTIL
+    )
+    return topo, plane, wl
+
+
+POLICY_CONFIGS = {
+    "random": dict(policy="random"),
+    "load_spreading": dict(policy="load_spreading"),
+    # Firmament-style baselines driven through the same solver (Fig. 6
+    # compares *solver* runtimes across policies).
+    "random_solver": dict(policy="random_solver"),
+    "spread_solver": dict(policy="spread_solver"),
+    "nomora_105_110": dict(
+        policy="nomora", params=PolicyParams(p_m=105, p_r=110)
+    ),
+    "nomora_110_115": dict(
+        policy="nomora", params=PolicyParams(p_m=110, p_r=115)
+    ),
+    "nomora_preempt": dict(
+        policy="nomora",
+        params=PolicyParams(p_m=105, p_r=110, preemption=True, beta_scale=1.0),
+    ),
+    "nomora_preempt_beta0": dict(
+        policy="nomora",
+        params=PolicyParams(p_m=105, p_r=110, preemption=True, beta_scale=0.0),
+    ),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def run_policy(name: str):
+    topo, plane, wl = cluster()
+    cfg = simulator.SimConfig(seed=SEED, migration_interval_s=30, **POLICY_CONFIGS[name])
+    return simulator.simulate(wl, plane, cfg)

@@ -1,0 +1,56 @@
+"""Scheduler-kernel microbenchmarks (wall time of the jnp op paths on this
+CPU container; the Pallas kernels are TPU-targeted and validated in
+interpret mode by tests). Reports us/call for the solver hot spots the
+paper's architecture exercises every scheduling round."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import auction, perf_model, policy
+from repro.kernels.auction_bid import ops as bid_ops
+from repro.kernels.costmap import ops as costmap_ops
+
+
+def _time(fn, *args, n=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    lut = perf_model.perf_lut_table()
+
+    for T, M in ((256, 1536), (512, 12_500)):
+        lat = jnp.asarray(rng.uniform(0, 900, (T, M)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, 4, T).astype(np.int32))
+        us = _time(lambda lut=lut, idx=idx, lat=lat: costmap_ops.costmap(lut, idx, lat))
+        rows.append((f"costmap_{T}x{M}", us, "Eq.6 cost matrix"))
+
+        vals = jnp.asarray(-rng.integers(100, 2000, (T, M)).astype(np.float32))
+        p1 = jnp.asarray(rng.integers(0, 500, M).astype(np.float32))
+        p2 = p1 + 10
+        us = _time(lambda v=vals, a=p1, b=p2: bid_ops.bid_top2(v, a, b))
+        rows.append((f"auction_bid_top2_{T}x{M}", us, "row top-2 w/ slot prices"))
+
+    # End-to-end auction round at benchmark scale.
+    T, M, J = 128, 1536, 8
+    w = np.full((T, M + J), int(policy.INF_COST), np.int64)
+    w[:, :M] = rng.integers(100, 1000, (T, M))
+    tj = rng.integers(0, J, T)
+    w[np.arange(T), M + tj] = 1001
+    caps = np.full(M, 4, np.int64)
+    t0 = time.perf_counter()
+    res = auction.solve_transportation(w, caps, M, M + tj, slots_per_machine=4)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append((f"auction_solve_{T}x{M}", dt, f"iters={res.iterations}"))
+    return rows

@@ -1,0 +1,35 @@
+"""Paper Fig. 8: task placement latency (submission -> placement)."""
+
+from __future__ import annotations
+
+from . import common
+
+
+def run():
+    rows = []
+    med = {}
+    for name in ("random", "load_spreading", "random_solver", "spread_solver",
+                 "nomora_105_110", "nomora_110_115", "nomora_preempt",
+                 "nomora_preempt_beta0"):
+        m = common.run_policy(name)
+        s = m.summary()
+        med[name] = s["placement_latency_s_p50"]
+        rows.append(
+            (
+                f"fig8_latency_{name}",
+                s["placement_latency_s_p50"] * 1e6,
+                f"p90_s={s['placement_latency_s_p90']:.2f};p99_s={s['placement_latency_s_p99']:.2f}",
+            )
+        )
+    # The paper compares Firmament policies end-to-end; the solver-backed
+    # baselines are the like-for-like comparison (the python baselines
+    # place in O(1) and exist for the quality comparison only).
+    for base in ("random_solver", "spread_solver"):
+        rows.append(
+            (
+                f"fig8_median_ratio_vs_{base}",
+                0.0,
+                f"{med[base] / max(med['nomora_105_110'], 1e-9):.2f}x",
+            )
+        )
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Fig. 9: task response time (submission -> completion)."""
+
+from __future__ import annotations
+
+from . import common
+
+
+def run():
+    rows = []
+    for name in ("random", "load_spreading", "nomora_105_110", "nomora_preempt"):
+        m = common.run_policy(name)
+        s = m.summary()
+        rows.append(
+            (
+                f"fig9_response_{name}",
+                s["response_time_s_p50"] * 1e6,
+                f"p90_s={s['response_time_s_p90']:.1f};p99_s={s['response_time_s_p99']:.1f}",
+            )
+        )
+    return rows

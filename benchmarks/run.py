@@ -1,0 +1,55 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Figures covered:
+  Fig. 3  perf_models        - model fits (Eqs. 2-5) + cost mapping
+  Fig. 5  placement_quality  - average application performance areas
+  Fig. 6  algo_runtime       - solver runtime per round
+  Fig. 7  migrations         - migrated-task percentage (preemption)
+  Fig. 8  placement_latency  - submission -> placement latency
+  Fig. 9  response_time      - submission -> completion
+  (extra) kernel_bench       - scheduler kernel microbenchmarks
+
+REPRO_BENCH_SCALE={small,medium,paper} controls simulation size.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (
+        algo_runtime,
+        kernel_bench,
+        migrations,
+        perf_models,
+        placement_latency,
+        placement_quality,
+        response_time,
+    )
+
+    modules = [
+        ("perf_models", perf_models),
+        ("placement_quality", placement_quality),
+        ("algo_runtime", algo_runtime),
+        ("migrations", migrations),
+        ("placement_latency", placement_latency),
+        ("response_time", response_time),
+        ("kernel_bench", kernel_bench),
+    ]
+    print("name,us_per_call,derived")
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}_ERROR,0,{type(e).__name__}: {e}")
+            continue
+        for row_name, us, derived in rows:
+            print(f"{row_name},{us:.1f},{derived}")
+        print(f"{name}_wall_s,{(time.time()-t0)*1e6:.0f},total", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

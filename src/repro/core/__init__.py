@@ -1,0 +1,23 @@
+"""NoMora core: the paper's contribution as a composable JAX library.
+
+Layers (paper §5.1 architecture):
+  1. perf_model  - functions predicting application performance from latency
+  2. latency     - the cluster latency measurement plane (PTPmesh stand-in)
+  3. policy      - the latency-driven, application-performance-aware policy
+  4. mcmf        - paper-faithful min-cost max-flow solver (flow_network)
+     auction     - TPU-native epsilon-scaling auction solver (production)
+  5. simulator   - event-driven evaluation harness (paper §6)
+"""
+
+from . import (  # noqa: F401
+    auction,
+    flow_network,
+    latency,
+    mcmf,
+    metrics,
+    perf_model,
+    policy,
+    simulator,
+    topology,
+    workload,
+)

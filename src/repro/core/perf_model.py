@@ -1,0 +1,181 @@
+"""Application performance prediction functions dependent upon network latency.
+
+Paper §3 ("Predicting application performance"): each application has a
+piecewise model — constant 1.0 (baseline) below a threshold latency, and a
+polynomial fitted with non-linear least squares above it (Eqs. 2-5).
+
+Predictions are discretised in steps of 10us and stored per job as a lookup
+table (paper §6, "Application performance predictions"); latency values are
+rounded to the nearest discretised entry, and values outside the defined
+interval use the smallest performance value defined for the function.
+
+Costs derived from performance follow §5.2: ``cost = round_2sig(1/p) * 100``
+(two significant digits, then x100, so the solver sees integers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Latency domain of the experiments (paper §3.1): total injected latency
+# ranged between 2us and 1000us.
+LATENCY_MIN_US = 0.0
+LATENCY_MAX_US = 1000.0
+LUT_STEP_US = 10.0  # paper §6: predictions discretised in steps of 10us
+LUT_SIZE = int(LATENCY_MAX_US / LUT_STEP_US) + 1  # 0, 10, ..., 1000
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfModel:
+    """Piecewise performance model: 1.0 below `threshold_us`, poly above.
+
+    ``coeffs`` are polynomial coefficients in *ascending* order
+    (c0 + c1*x + c2*x^2 + ...), applied to latency in microseconds.
+    """
+
+    name: str
+    threshold_us: float
+    coeffs: tuple  # ascending-order polynomial coefficients
+
+    def __call__(self, latency_us):
+        return self.evaluate(latency_us)
+
+    def evaluate(self, latency_us):
+        """Normalised performance in (0, 1] for latency in us (vectorised)."""
+        x = jnp.asarray(latency_us, dtype=jnp.float32)
+        # Out-of-range latencies use the smallest performance value defined
+        # for the function (paper §6) == value at the domain edge.
+        xc = jnp.clip(x, LATENCY_MIN_US, LATENCY_MAX_US)
+        poly = jnp.zeros_like(xc)
+        for k, c in enumerate(self.coeffs):
+            poly = poly + c * xc**k
+        out = jnp.where(xc < self.threshold_us, 1.0, poly)
+        # The fitted functions never drop below ~0.1 in-domain (paper sets
+        # gamma=1001 on that basis); clamp defensively for numeric safety.
+        return jnp.clip(out, 1e-2, 1.0)
+
+    def lut(self) -> jnp.ndarray:
+        """Discretised predictions: perf at 0, 10, ..., 1000 us."""
+        grid = jnp.arange(LUT_SIZE, dtype=jnp.float32) * LUT_STEP_US
+        return self.evaluate(grid)
+
+
+# --- Paper Eqs. 2-5 (coefficients verbatim) --------------------------------
+
+MEMCACHED = PerfModel(
+    name="memcached",
+    threshold_us=40.0,
+    coeffs=(1.067, -3.093e-3, 4.084e-6, -1.898e-9),  # Eq. 2
+)
+
+STRADS = PerfModel(
+    name="strads",
+    threshold_us=20.0,
+    coeffs=(1.009, -2.095e-3, 2.571e-6, -1.232e-9),  # Eq. 3
+)
+
+SPARK = PerfModel(
+    name="spark",
+    threshold_us=200.0,
+    coeffs=(1.0199, -1.161e-4),  # Eq. 4 (linear)
+)
+
+TENSORFLOW = PerfModel(
+    name="tensorflow",
+    threshold_us=40.0,
+    coeffs=(1.005, -5.146e-4, 5.837e-7, -3.46e-10),  # Eq. 5
+)
+
+APP_MODELS: Dict[str, PerfModel] = {
+    m.name: m for m in (MEMCACHED, STRADS, SPARK, TENSORFLOW)
+}
+APP_MODEL_LIST: Sequence[PerfModel] = (MEMCACHED, STRADS, SPARK, TENSORFLOW)
+APP_MODEL_INDEX: Dict[str, int] = {m.name: i for i, m in enumerate(APP_MODEL_LIST)}
+
+
+def perf_lut_table() -> jnp.ndarray:
+    """(n_models, LUT_SIZE) discretised performance table, row per model."""
+    return jnp.stack([m.lut() for m in APP_MODEL_LIST], axis=0)
+
+
+def lookup_perf(lut_table: jnp.ndarray, model_idx, latency_us):
+    """Discretised performance lookup (paper §6 hash-table semantics).
+
+    ``latency_us`` is rounded to the nearest 10us step and clipped to the
+    defined domain; ``model_idx`` selects the per-job prediction function.
+    Both arguments broadcast.
+    """
+    step = jnp.clip(
+        jnp.round(jnp.asarray(latency_us, jnp.float32) / LUT_STEP_US),
+        0,
+        LUT_SIZE - 1,
+    ).astype(jnp.int32)
+    return lut_table[model_idx, step]
+
+
+def perf_to_cost(perf):
+    """Paper §5.2 integer arc cost: round(1/p) to 2 significant digits, x100.
+
+    For p in [0.1, 1], 1/p is in [1, 10] so 2 significant digits == 1 decimal
+    place; cost = round(10/p) * 10 reproduces that exactly and stays integer
+    for the degenerate p<0.1 tail as well.
+    """
+    inv = 1.0 / jnp.clip(jnp.asarray(perf, jnp.float32), 1e-6, None)
+    return (jnp.round(inv * 10.0) * 10.0).astype(jnp.int32)
+
+
+def cost_from_latency(lut_table, model_idx, latency_us):
+    """Fused lookup + cost mapping; the reference for kernels/costmap."""
+    return perf_to_cost(lookup_perf(lut_table, model_idx, latency_us))
+
+
+# --- Model fitting (reproduces the paper's SciPy curve_fit flow, §3.2) ------
+
+
+def fit_perf_model(
+    name: str,
+    latency_us: np.ndarray,
+    norm_perf: np.ndarray,
+    sigma: np.ndarray | None = None,
+    threshold_us: float = 40.0,
+    degree: int = 3,
+) -> PerfModel:
+    """Fit a PerfModel to experimental data via non-linear least squares.
+
+    Mirrors §3.2: normalise performance to baseline (caller), then
+    ``scipy.optimize.curve_fit`` a polynomial with the measurement standard
+    deviation as the ``sigma`` weighting parameter.
+    """
+    from scipy.optimize import curve_fit  # local import: scipy optional path
+
+    latency_us = np.asarray(latency_us, dtype=np.float64)
+    norm_perf = np.asarray(norm_perf, dtype=np.float64)
+    mask = latency_us >= threshold_us
+
+    def poly(x, *coeffs):
+        return sum(c * x**k for k, c in enumerate(coeffs))
+
+    p0 = np.zeros(degree + 1)
+    p0[0] = 1.0
+    popt, _ = curve_fit(
+        poly,
+        latency_us[mask],
+        norm_perf[mask],
+        p0=p0,
+        sigma=None if sigma is None else np.asarray(sigma)[mask],
+    )
+    return PerfModel(name=name, threshold_us=threshold_us, coeffs=tuple(popt))
+
+
+def model_r2(model: PerfModel, latency_us: np.ndarray, norm_perf: np.ndarray) -> float:
+    """Coefficient of determination of ``model`` on the given data."""
+    pred = np.asarray(model.evaluate(latency_us))
+    y = np.asarray(norm_perf)
+    ss_res = float(np.sum((y - pred) ** 2))
+    ss_tot = float(np.sum((y - np.mean(y)) ** 2))
+    return 1.0 - ss_res / max(ss_tot, 1e-12)

@@ -1,0 +1,214 @@
+"""NoMora scheduling policy (paper §5.2) + baseline policies (§6.1).
+
+The policy's cost model, per round:
+
+  d_{t,m}   = round2sig(1 / p(max latency(M_root, M_m))) * 100      (Eq. 6)
+  c_{t,r}   = max_{m in r} d_{t,m}                                  (Eq. 8)
+  b_t       = max_r c_{t,r}                                         (Eq. 9)
+  a_t       = omega * wait_time + gamma                             (Eq. 10)
+  preemption: the running task's arc to its current machine is discounted
+  by beta (accumulated runtime), Eq. 7; beta=0 => migration decided purely
+  on expected performance.
+
+Preference arcs: a machine arc exists iff d <= p_m; a rack arc iff
+c <= p_r; the cluster-aggregator arc always exists (cost b_t).
+
+Because all aggregator arcs below the task level have cost 0 and capacities
+that never bind beyond machine slots (DESIGN.md §5.1), the cheapest path
+from task t to machine m costs exactly
+
+  w(t,m) = d    if d <= p_m          (direct preference arc; d <= c <= b)
+         = c_r  elif c_r <= p_r      (via rack aggregator)
+         = b_t  otherwise            (via cluster aggregator)
+
+`dense_costs` materialises this (T, M+J) matrix (last J columns are the
+per-job unscheduled aggregators); both the auction solver and the reference
+MCMF (via flow_network.py, which keeps the aggregator vertices explicit)
+consume the same ingredients, and tests assert their optima agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import perf_model
+from .topology import Topology
+
+INF_COST = np.int32(2**30)  # "no arc"
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyParams:
+    """Cost-model parameters (paper §5.2 / §6)."""
+
+    p_m: int = 105  # machine-arc preference threshold
+    p_r: int = 110  # rack-arc preference threshold
+    omega: float = 1.0  # wait-time escalation factor (per second)
+    gamma: int = 1001  # unscheduled offset, > any arc cost (paper §6)
+    preemption: bool = False
+    beta_scale: float = 100.0 / 3600.0  # cost points per second already run
+    unsched_capacity: Optional[int] = None  # None => N_i (DESIGN.md D1)
+
+
+@dataclasses.dataclass
+class RoundState:
+    """One scheduling round's inputs (non-root tasks whose root is placed)."""
+
+    task_job: np.ndarray  # (T,) round-local job index 0..J-1
+    perf_idx: np.ndarray  # (T,) perf-model index per task
+    root_machine: np.ndarray  # (J,) machine of each job's root
+    root_latency: np.ndarray  # (J, M) RTT us from each root to every machine
+    wait_s: np.ndarray  # (T,) task wait time alpha
+    run_s: np.ndarray  # (T,) accumulated runtime beta (running tasks)
+    cur_machine: np.ndarray  # (T,) current machine or -1
+    free_slots: np.ndarray  # (M,) slots available to this round
+
+    @property
+    def n_tasks(self) -> int:
+        return int(self.task_job.shape[0])
+
+    @property
+    def n_jobs(self) -> int:
+        return int(self.root_machine.shape[0])
+
+    @property
+    def n_machines(self) -> int:
+        return int(self.free_slots.shape[0])
+
+
+def _rack_pad(n_machines: int, per_rack: int) -> int:
+    return -(-n_machines // per_rack) * per_rack
+
+
+@dataclasses.dataclass
+class DenseCosts:
+    """w(t, col): columns = machines ++ per-job unscheduled aggregators."""
+
+    w: np.ndarray  # (T, M+J) int32; INF_COST where no arc
+    col_capacity: np.ndarray  # (M+J,) int32
+    d: np.ndarray  # (T, M) machine arc costs (pre-threshold), for tests
+    c_rack: np.ndarray  # (T, R)
+    b: np.ndarray  # (T,)
+    a: np.ndarray  # (T,) unscheduled costs
+
+
+def machine_costs(
+    lut_table: jnp.ndarray,
+    perf_idx: np.ndarray,
+    task_root_latency: np.ndarray,
+) -> np.ndarray:
+    """d_{t,m} for every task x machine (Eq. 6). Uses the costmap kernel."""
+    from repro.kernels.costmap import ops as costmap_ops
+
+    return np.asarray(
+        costmap_ops.costmap(
+            lut_table, jnp.asarray(perf_idx), jnp.asarray(task_root_latency)
+        )
+    )
+
+
+def dense_costs(
+    state: RoundState,
+    topo: Topology,
+    params: PolicyParams,
+    lut_table: Optional[jnp.ndarray] = None,
+) -> DenseCosts:
+    """Materialise the collapsed NoMora cost matrix for one round."""
+    if lut_table is None:
+        lut_table = perf_model.perf_lut_table()
+    T, J, M = state.n_tasks, state.n_jobs, state.n_machines
+
+    # Eq. 6 per task: latency row is the task's job's root row.
+    task_lat = state.root_latency[state.task_job]  # (T, M)
+    d = machine_costs(lut_table, state.perf_idx, task_lat)  # (T, M) int32
+
+    # Eq. 8: worst machine per rack (pad partial racks with 0 so max ignores).
+    per_rack = topo.machines_per_rack
+    Mp = _rack_pad(M, per_rack)
+    d_pad = np.zeros((T, Mp), np.int32)
+    d_pad[:, :M] = d
+    c_rack = d_pad.reshape(T, Mp // per_rack, per_rack).max(axis=2)  # (T, R)
+    b = c_rack.max(axis=1)  # (T,) Eq. 9
+
+    rack_of_m = np.arange(M) // per_rack
+    c_for_m = c_rack[:, rack_of_m]  # (T, M)
+    w_m = np.where(
+        d <= params.p_m, d, np.where(c_for_m <= params.p_r, c_for_m, b[:, None])
+    ).astype(np.int32)
+
+    # Preemption (Eq. 7): discount the running task's current machine by beta.
+    if params.preemption:
+        running = state.cur_machine >= 0
+        if running.any():
+            disc = np.maximum(
+                1,
+                w_m[running, state.cur_machine[running]]
+                - (state.run_s[running] * params.beta_scale).astype(np.int64),
+            ).astype(np.int32)
+            w_m[running, state.cur_machine[running]] = disc
+
+    # Eq. 10 unscheduled-aggregator columns (one per job; own-job only).
+    a = (params.omega * state.wait_s + params.gamma).astype(np.int32)
+    w_u = np.full((T, J), INF_COST, np.int32)
+    w_u[np.arange(T), state.task_job] = a
+
+    w = np.concatenate([w_m, w_u], axis=1)
+
+    tasks_per_job = np.bincount(state.task_job, minlength=J).astype(np.int32)
+    unsched_cap = (
+        tasks_per_job
+        if params.unsched_capacity is None
+        else np.minimum(tasks_per_job, params.unsched_capacity).astype(np.int32)
+    )
+    col_capacity = np.concatenate([state.free_slots.astype(np.int32), unsched_cap])
+    return DenseCosts(w=w, col_capacity=col_capacity, d=d, c_rack=c_rack, b=b, a=a)
+
+
+# --- Baseline policies (paper §6.1) ----------------------------------------
+
+
+def random_placement(
+    rng: np.random.Generator, n_tasks: int, free_slots: np.ndarray
+) -> np.ndarray:
+    """Random policy: tasks always schedule if resources are idle.
+
+    Returns machine per task (-1 if the cluster is full). Sampling is uniform
+    over free *slots*, updating availability as tasks land.
+    """
+    free = free_slots.astype(np.int64).copy()
+    out = np.full(n_tasks, -1, np.int64)
+    total = int(free.sum())
+    for t in range(n_tasks):
+        if total == 0:
+            break
+        # Sample a slot uniformly: pick machine weighted by free slots.
+        k = int(rng.integers(total))
+        m = int(np.searchsorted(np.cumsum(free), k, side="right"))
+        out[t] = m
+        free[m] -= 1
+        total -= 1
+    return out
+
+
+def load_spreading_placement(
+    task_counts: np.ndarray, free_slots: np.ndarray, n_tasks: int
+) -> np.ndarray:
+    """Load-spreading policy: each task goes to the least-loaded machine."""
+    counts = task_counts.astype(np.int64).copy()
+    free = free_slots.astype(np.int64).copy()
+    out = np.full(n_tasks, -1, np.int64)
+    for t in range(n_tasks):
+        avail = free > 0
+        if not avail.any():
+            break
+        masked = np.where(avail, counts, np.iinfo(np.int64).max)
+        m = int(np.argmin(masked))
+        out[t] = m
+        counts[m] += 1
+        free[m] -= 1
+    return out

@@ -1,0 +1,1 @@
+from . import elastic, sharding, straggler  # noqa: F401

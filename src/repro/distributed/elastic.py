@@ -1,0 +1,57 @@
+"""Elastic scaling + failure recovery.
+
+Two cooperating layers:
+
+1. Cluster level (NoMora): a machine-removal event re-queues its tasks;
+   the next scheduling round re-places them via the policy — the paper's
+   migration mechanism doubles as failure recovery. The simulator supports
+   failure injection (SimConfig.failures) and tests assert recovery.
+
+2. Job level (JAX): a training job that loses hosts restarts from the
+   latest checkpoint on a smaller mesh. `elastic_mesh` picks the largest
+   feasible (data, model) factorisation for the surviving device count and
+   CheckpointManager.restore(..., shardings=...) re-shards host-side numpy
+   onto the new mesh (no resharding collectives needed at load).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def elastic_mesh(
+    n_devices: int,
+    model_parallelism: int,
+    *,
+    pod_axis: Optional[int] = None,
+    devices: Optional[Sequence] = None,
+):
+    """Largest mesh (data, model) [, pod] that fits n_devices.
+
+    Keeps model parallelism fixed (parameter layout compatibility) and
+    shrinks the data axis — the standard elastic-DP policy.
+    """
+    if n_devices < model_parallelism:
+        raise ValueError(
+            f"cannot keep model_parallelism={model_parallelism} with "
+            f"{n_devices} devices"
+        )
+    data = n_devices // model_parallelism
+    use = data * model_parallelism
+    devs = list(devices or jax.devices())[:use]
+    if pod_axis and pod_axis > 1 and data % pod_axis == 0:
+        shape: Tuple[int, ...] = (pod_axis, data // pod_axis, model_parallelism)
+        names: Tuple[str, ...] = ("pod", "data", "model")
+    else:
+        shape = (data, model_parallelism)
+        names = ("data", "model")
+    import numpy as np
+
+    mesh_devs = np.asarray(devs).reshape(shape)
+    return jax.sharding.Mesh(mesh_devs, names)
+
+
+def survivors(n_total: int, failed: Sequence[int]) -> int:
+    return n_total - len(set(failed))

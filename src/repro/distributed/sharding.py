@@ -1,0 +1,202 @@
+"""Logical-axis -> mesh sharding rules (MaxText-style).
+
+Every parameter/cache leaf carries a tuple of logical axis names (see
+models/layers.Param). Rules map logical names to mesh axes; a dimension
+whose size does not divide the mapped mesh-axis product falls back to
+replication (recorded: llama4-scout's 40 q-heads on a 16-way model axis
+shard as a packed dim instead — see DESIGN.md §6).
+
+Two standard rule sets:
+  train_rules - FSDP("data") on the embed dim x TP("model") on
+                heads/mlp/vocab/experts + batch over (pod, data). ZeRO-1
+                optimizer state inherits parameter sharding (already fully
+                sharded under FSDP+TP).
+  serve_rules - pure TP: params replicated on "data" except model-axis
+                dims; batch over (pod, data); long-context caches shard
+                the sequence axis over "data" (context parallelism).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Any]  # logical axis -> mesh axis | tuple | None
+
+# Activation-constraint context: the step builders push (mesh, rules) here
+# for the duration of tracing; model code calls `constrain` at residual-
+# stream boundaries. Without a context, constrain is a no-op (single-device
+# tests). Without these constraints GSPMD may all-gather the *batch* dim at
+# FSDP boundaries (measured: 79.7 GB/device temp on qwen3-0.6b train_4k;
+# 2.9 GB with constraints — see EXPERIMENTS.md §Perf iteration 0).
+_ACT_CTX: list = []
+
+
+@contextlib.contextmanager
+def activation_ctx(mesh: Mesh, rules: Rules):
+    _ACT_CTX.append((mesh, rules))
+    try:
+        yield
+    finally:
+        _ACT_CTX.pop()
+
+
+def constrain(x, logical: Tuple[Optional[str], ...]):
+    """with_sharding_constraint by logical axis names (no-op w/o context)."""
+    if not _ACT_CTX:
+        return x
+    mesh, rules = _ACT_CTX[-1]
+    spec = spec_for(logical, tuple(x.shape), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def train_rules(multi_pod: bool) -> Rules:
+    return {
+        "batch": ("pod", "data") if multi_pod else ("data",),
+        "layers": None,
+        "embed": ("data",),  # FSDP
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "experts": ("model",),  # EP
+        "moe_cap": ("data",),  # MoE dispatch-buffer capacity dim
+        "rnn": ("model",),
+        "seq": None,
+        "act_embed": None,  # residual-stream embed dim (activations)
+        # Megatron-style sequence-parallel residual stream: overridden to
+        # ("model",) for deep/wide models where stacked scan carries
+        # dominate memory (launch/dryrun heuristic + §Perf log).
+        "act_seq": None,
+    }
+
+
+def serve_rules(multi_pod: bool) -> Rules:
+    return {
+        "batch": ("pod", "data") if multi_pod else ("data",),
+        "layers": None,
+        "embed": None,  # pure TP at inference
+        "vocab": ("model",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "mlp": ("model",),
+        "experts": ("model",),
+        "moe_cap": ("data",),
+        "rnn": ("model",),
+        # KV caches: GQA kv-head counts (8/1/24) don't divide the 16-way
+        # model axis, so the *sequence* axis carries the model shards
+        # (sequence-sharded attention = a psum over per-shard partial
+        # softmax stats; XLA SPMD inserts it). kv_heads keeps a model rule
+        # for archs where it divides (none of the assigned ten at 16-way,
+        # but spec_for falls through cleanly).
+        "seq": ("model",),
+        "act_embed": None,
+        "act_seq": None,
+    }
+
+
+def _axis_size(mesh: Mesh, names: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[n] for n in names]))
+
+
+def spec_for(
+    axes: Tuple[Optional[str], ...],
+    shape: Tuple[int, ...],
+    mesh: Mesh,
+    rules: Rules,
+) -> P:
+    """PartitionSpec for one leaf, with divisibility fallback."""
+    entries = []
+    used: set = set()
+    for dim, logical in zip(shape, axes):
+        mesh_axes = rules.get(logical) if logical else None
+        if mesh_axes is None:
+            entries.append(None)
+            continue
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        mesh_axes = tuple(a for a in mesh_axes if a in mesh.shape and a not in used)
+        if not mesh_axes or dim % _axis_size(mesh, mesh_axes) != 0:
+            entries.append(None)
+            continue
+        used.update(mesh_axes)
+        entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_shardings(axes_tree: Any, shape_tree: Any, mesh: Mesh, rules: Rules):
+    """NamedSharding tree for a params/cache pytree.
+
+    `axes_tree` leaves are axis tuples; `shape_tree` leaves anything with
+    .shape (arrays or ShapeDtypeStructs).
+    """
+    return jax.tree_util.tree_map(
+        lambda axes, leaf: NamedSharding(
+            mesh, spec_for(tuple(axes), tuple(leaf.shape), mesh, rules)
+        ),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def batch_sharding(mesh: Mesh, rules: Rules, batch_dims: int = 2):
+    """Sharding for input batches: dim0 = batch, rest replicated."""
+    b = rules["batch"]
+    if isinstance(b, str):
+        b = (b,)
+    b = tuple(a for a in (b or ()) if a in mesh.shape)
+    return NamedSharding(mesh, P(b if len(b) != 1 else b[0]))
+
+
+def batch_spec_tree(batch_tree: Any, mesh: Mesh, rules: Rules):
+    """Shard dim0 (batch) of every batch leaf, with divisibility fallback."""
+    b = rules["batch"]
+    if isinstance(b, str):
+        b = (b,)
+    b = tuple(a for a in (b or ()) if a in mesh.shape)
+
+    def leaf_sharding(leaf):
+        if b and leaf.shape and leaf.shape[0] % _axis_size(mesh, b) == 0:
+            return NamedSharding(mesh, P(b if len(b) != 1 else b[0]))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(leaf_sharding, batch_tree)
+
+
+def cache_axes_tree(cache_tree: Any) -> Any:
+    """Logical axes for decode caches, keyed by leaf name/rank heuristics:
+    K/V (B, KVH, S, D) -> (batch, kv_heads, seq, None);
+    rwkv S (B, H, N, N) -> (batch, heads, None, None);
+    rec/rwkv vectors (B, D)/(B, C, D) -> (batch, ..., rnn/embed-like)."""
+
+    def leaf_axes(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        rank = len(leaf.shape)
+        stacked = rank >= 1 and "blocks" in "/".join(
+            str(getattr(p, "key", "")) for p in path
+        )
+        lead = ("layers",) if stacked else ()
+        r = rank - len(lead)
+        if name in ("k", "v"):
+            return lead + ("batch", "kv_heads", "seq", None)[:r]
+        if name == "S":
+            return lead + ("batch", "heads", None, None)[:r]
+        if name == "h":
+            return lead + ("batch", "rnn")[:r]
+        if name == "conv":
+            return lead + ("batch", None, "rnn")[:r]
+        if name in ("shift", "shift_c"):
+            return lead + ("batch", "embed")[:r]
+        return lead + ("batch",) + (None,) * (r - 1)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_axes(p, l) for p, l in flat]
+    )

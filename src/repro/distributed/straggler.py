@@ -1,0 +1,46 @@
+"""Straggler mitigation at the cluster-scheduling level.
+
+The paper's own mechanism — migrate a task whose *predicted* performance
+under current latency drops — is the straggler response: rather than
+duplicating work (MapReduce-style speculation), NoMora moves the task to a
+placement whose expected performance is higher (paper §7: "migration can
+be triggered only if the application performance drops below a certain
+threshold").
+
+`StragglerDetector` implements that trigger: it watches per-job predicted
+performance samples and flags jobs whose EWMA stays below `threshold` for
+`patience` consecutive samples; the simulator then schedules a migration
+round restricted to those jobs' tasks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    threshold: float = 0.85  # predicted normalised performance
+    patience: int = 3
+    alpha: float = 0.5  # EWMA factor
+    _ewma: Dict[int, float] = dataclasses.field(default_factory=dict)
+    _below: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+    def observe(self, job_id: int, perf: float) -> bool:
+        """Record a sample; True if the job is now flagged as straggling."""
+        prev = self._ewma.get(job_id, perf)
+        ew = self.alpha * perf + (1 - self.alpha) * prev
+        self._ewma[job_id] = ew
+        if ew < self.threshold:
+            self._below[job_id] = self._below.get(job_id, 0) + 1
+        else:
+            self._below[job_id] = 0
+        return self._below[job_id] >= self.patience
+
+    def flagged(self) -> List[int]:
+        return [j for j, n in self._below.items() if n >= self.patience]
+
+    def clear(self, job_id: int) -> None:
+        self._below[job_id] = 0
+        self._ewma.pop(job_id, None)

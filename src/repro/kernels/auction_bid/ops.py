@@ -1,0 +1,29 @@
+"""Public auction bidding op: Pallas on TPU, jnp top-2 elsewhere."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def bid_top2(
+    values: jnp.ndarray,
+    price1: jnp.ndarray,
+    price2: jnp.ndarray,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """(best_idx, best_val, second_val) per row. See ref.py for semantics."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return kernel.bid_top2_pallas(values, price1, price2, interpret=interpret)
+    return _bid_top2_jnp(values, price1, price2)
+
+
+@jax.jit
+def _bid_top2_jnp(values, price1, price2):
+    return ref.bid_top2_ref(values, price1, price2)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the auction bidding reduction.
+
+Given the value matrix V (T, C), per-column lowest slot price `price1` and
+second-lowest slot price `price2`, each row's bid needs:
+
+  best column  j* = argmax_j (V[t,j] - price1[j])
+  best value   v1 = max_j    (V[t,j] - price1[j])
+  second value v2 = max( max_{j != j*} (V[t,j] - price1[j]),
+                         V[t,j*] - price2[j*] )
+
+The second term is the multi-slot ("similar objects") case: the runner-up
+offer may be the *same* machine's next-cheapest slot (Bertsekas & Castanon
+1989). With unit capacities price2=+inf recovers the plain top-2.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-(2.0**62))
+
+
+def bid_top2_ref(values, price1, price2):
+    v1 = values - price1[None, :]
+    v2 = values - price2[None, :]
+    best_idx = jnp.argmax(v1, axis=1)
+    best_val = jnp.max(v1, axis=1)
+    cols = jnp.arange(values.shape[1])
+    masked = jnp.where(cols[None, :] == best_idx[:, None], NEG_INF, v1)
+    runner_other = jnp.max(masked, axis=1)
+    runner_same = jnp.take_along_axis(v2, best_idx[:, None], axis=1)[:, 0]
+    second_val = jnp.maximum(runner_other, runner_same)
+    return best_idx.astype(jnp.int32), best_val, second_val

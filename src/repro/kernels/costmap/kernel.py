@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: fused latency -> performance -> integer arc cost.
+
+TPU adaptation (DESIGN.md §4.2): Firmament computes arc costs scalar-per-arc
+through a hash-table lookup. On TPU, arbitrary gathers are the wrong shape;
+but the paper's 10us-discretised LUT *is* the piecewise polynomial (Eqs. 2-5)
+evaluated on the grid, so we evaluate the polynomial directly on the
+grid-quantised latency instead of gathering: bit-identical results, pure VPU
+elementwise work, no gather. Model selection (4 models) is a sum of masked
+coefficient broadcasts.
+
+Tiling: latency (T, M) is processed in (BT, BM) VMEM tiles; per-task model
+ids ride along as a (BT, 1) column. Defaults (256, 512) keep the working set
+at ~0.75 MB of VMEM (lat tile f32 + cost tile i32 + column).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import perf_model
+
+DEFAULT_BT = 256
+DEFAULT_BM = 512
+_MAX_DEGREE = 4  # cubic + constant
+
+
+def _model_tables(models: Sequence[perf_model.PerfModel]):
+    """(coeffs[n_models, 4], thresholds[n_models]) as python constants."""
+    coeffs = []
+    thresholds = []
+    for m in models:
+        c = list(m.coeffs) + [0.0] * (_MAX_DEGREE - len(m.coeffs))
+        coeffs.append(c[:_MAX_DEGREE])
+        thresholds.append(m.threshold_us)
+    return coeffs, thresholds
+
+
+def _costmap_kernel(perf_idx_ref, lat_ref, out_ref, *, coeffs, thresholds):
+    lat = lat_ref[...]  # (BT, BM) f32
+    idx = perf_idx_ref[...]  # (BT, 1) int32
+    # LUT semantics: round to nearest 10us step, clip to [0, 1000].
+    latq = jnp.clip(
+        jnp.round(lat / perf_model.LUT_STEP_US) * perf_model.LUT_STEP_US,
+        perf_model.LATENCY_MIN_US,
+        perf_model.LATENCY_MAX_US,
+    )
+    n_models = len(coeffs)
+    # Per-row coefficient/threshold selection via masked sums (n_models small).
+    c = [jnp.zeros_like(lat[:, :1]) for _ in range(_MAX_DEGREE)]
+    thr = jnp.zeros_like(lat[:, :1])
+    for j in range(n_models):
+        m = (idx == j).astype(latq.dtype)  # (BT, 1)
+        for k in range(_MAX_DEGREE):
+            c[k] = c[k] + m * coeffs[j][k]
+        thr = thr + m * thresholds[j]
+    # Horner evaluation of the piecewise polynomial.
+    poly = c[_MAX_DEGREE - 1]
+    for k in range(_MAX_DEGREE - 2, -1, -1):
+        poly = poly * latq + c[k]
+    below = latq < thr
+    pf = jnp.where(below, 1.0, poly)
+    pf = jnp.clip(pf, 1e-2, 1.0)
+    # cost = round(1/p to 2 significant digits) * 100 == round(10/p) * 10.
+    out_ref[...] = (jnp.round(10.0 / pf) * 10.0).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("models", "block_t", "block_m", "interpret")
+)
+def costmap_pallas(
+    perf_idx: jnp.ndarray,  # (T,) int32
+    latency_us: jnp.ndarray,  # (T, M) f32
+    *,
+    models: tuple = tuple(perf_model.APP_MODEL_LIST),
+    block_t: int = DEFAULT_BT,
+    block_m: int = DEFAULT_BM,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    T, M = latency_us.shape
+    bt = min(block_t, T)
+    bm = min(block_m, M)
+    coeffs, thresholds = _model_tables(models)
+    grid = (pl.cdiv(T, bt), pl.cdiv(M, bm))
+    kernel = functools.partial(
+        _costmap_kernel, coeffs=coeffs, thresholds=thresholds
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bt, bm), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bt, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, M), jnp.int32),
+        interpret=interpret,
+    )(perf_idx.astype(jnp.int32)[:, None], latency_us.astype(jnp.float32))

@@ -1,0 +1,39 @@
+"""Public costmap op: Pallas on TPU, pure-jnp LUT path elsewhere."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def costmap(
+    lut_table: jnp.ndarray,
+    perf_idx: jnp.ndarray,
+    latency_us: jnp.ndarray,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(T, M) int32 arc costs d_{t,m} (paper Eq. 6).
+
+    `lut_table` is used by the jnp reference path; the Pallas path evaluates
+    the generating piecewise polynomials directly (bit-identical on the 10us
+    grid, see kernel.py). Pass `use_pallas=True, interpret=True` to exercise
+    the kernel body on CPU.
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return kernel.costmap_pallas(perf_idx, latency_us, interpret=interpret)
+    return _costmap_jnp(lut_table, perf_idx, latency_us)
+
+
+@jax.jit
+def _costmap_jnp(lut_table, perf_idx, latency_us):
+    return ref.costmap_ref(lut_table, perf_idx, latency_us)

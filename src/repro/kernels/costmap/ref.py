@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the costmap kernel.
+
+cost(t, m) = round2sig(1 / p_{model(t)}(round10(latency(t, m)))) * 100
+exactly as repro.core.perf_model defines it (paper Eq. 6 + §5.2 rounding +
+§6 10us LUT discretisation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import perf_model
+
+
+def costmap_ref(
+    lut_table: jnp.ndarray,  # (n_models, LUT_SIZE) f32
+    perf_idx: jnp.ndarray,  # (T,) int32
+    latency_us: jnp.ndarray,  # (T, M) f32
+) -> jnp.ndarray:  # (T, M) int32
+    perf = perf_model.lookup_perf(lut_table, perf_idx[:, None], latency_us)
+    return perf_model.perf_to_cost(perf)

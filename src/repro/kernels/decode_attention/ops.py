@@ -1,0 +1,35 @@
+"""Public decode-attention op with automatic backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,
+    *,
+    scale: float | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(B,H,D) query vs (B,KVH,S,D) cache -> (B,H,D)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return kernel.decode_attention_pallas(
+            q, k_cache, v_cache, lengths, scale=scale, interpret=interpret
+        )
+    return _ref_jit(q, k_cache, v_cache, lengths, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def _ref_jit(q, k_cache, v_cache, lengths, *, scale):
+    return ref.decode_attention_ref(q, k_cache, v_cache, lengths, scale=scale)

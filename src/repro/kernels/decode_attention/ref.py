@@ -1,0 +1,34 @@
+"""Pure-jnp oracle: single-token GQA attention against a KV cache."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, H, D) query for the new token
+    k_cache: jnp.ndarray,  # (B, KVH, S, D)
+    v_cache: jnp.ndarray,  # (B, KVH, S, D)
+    lengths: jnp.ndarray,  # (B,) valid cache lengths
+    *,
+    scale: float | None = None,
+) -> jnp.ndarray:  # (B, H, D)
+    B, H, D = q.shape
+    KVH, S = k_cache.shape[1], k_cache.shape[2]
+    g = H // KVH
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    kx = jnp.repeat(k_cache, g, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v_cache, g, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kx) * scale
+    mask = jnp.arange(S)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    p = _softmax(logits)
+    out = jnp.einsum("bhs,bhsd->bhd", p, vx)
+    return out.astype(q.dtype)
+
+
+def _softmax(x):
+    m = x.max(axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / e.sum(axis=-1, keepdims=True)

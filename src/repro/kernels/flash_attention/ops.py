@@ -1,0 +1,35 @@
+"""Public attention op with automatic backend dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Causal GQA attention: (B,H,S,D) x (B,KVH,S,D) -> (B,H,S,D)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return kernel.flash_attention_pallas(
+            q, k, v, causal=causal, scale=scale, interpret=interpret
+        )
+    return _ref_jit(q, k, v, causal=causal, scale=scale)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale"))
+def _ref_jit(q, k, v, *, causal, scale):
+    return ref.attention_ref(q, k, v, causal=causal, scale=scale)

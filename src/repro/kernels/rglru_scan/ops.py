@@ -1,0 +1,29 @@
+"""Public RG-LRU scan op with automatic backend dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+
+def rglru_scan(
+    log_a: jnp.ndarray,
+    gx: jnp.ndarray,
+    h0: jnp.ndarray | None = None,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """(out, final_state) for the RG-LRU recurrence. See ref.py."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return kernel.rglru_scan_pallas(log_a, gx, h0, interpret=interpret)
+    return _ref_jit(log_a, gx, h0)
+
+
+@jax.jit
+def _ref_jit(log_a, gx, h0):
+    return ref.rglru_scan_ref(log_a, gx, h0)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the RG-LRU gated linear recurrence (RecurrentGemma).
+
+Given per-step log-decay log_a_t (= -c * softplus(Lambda) * sigmoid(gate))
+and gated input gx_t (= input_gate * x_t), both computed by the caller:
+
+  a_t = exp(log_a_t)
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * gx_t
+
+The sqrt(1-a^2) normaliser is computed as sqrt(-expm1(2*log_a)) for
+stability at a ~ 1.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(
+    log_a: jnp.ndarray,  # (B, T, D) <= 0
+    gx: jnp.ndarray,  # (B, T, D)
+    h0: jnp.ndarray | None = None,  # (B, D)
+):
+    B, T, D = log_a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+
+    def step(h, inp):
+        la_t, gx_t = inp  # (B, D)
+        a_t = jnp.exp(la_t)
+        mult = jnp.sqrt(-jnp.expm1(2.0 * la_t))
+        h = a_t * h + mult * gx_t
+        return h, h
+
+    la = jnp.moveaxis(log_a.astype(jnp.float32), 1, 0)  # (T, B, D)
+    g = jnp.moveaxis(gx.astype(jnp.float32), 1, 0)
+    h_final, hs = jax.lax.scan(step, h0.astype(jnp.float32), (la, g))
+    out = jnp.moveaxis(hs, 0, 1)  # (B, T, D)
+    return out.astype(gx.dtype), h_final

@@ -1,0 +1,142 @@
+"""Public RWKV-6 scan op: chunk-checkpointed custom VJP.
+
+Naive AD through the per-token lax.scan saves the (B, H, N, N) state for
+every timestep (64 GB/device at rwkv6-7b train_4k). Production RWKV
+kernels instead checkpoint the state every `chunk` steps and recompute
+inside chunks during the backward pass; we implement exactly that as a
+jax.custom_vjp: forward stores T/chunk state checkpoints + the (already
+live) inputs, backward re-runs each chunk under jax.vjp in reverse order.
+Peak memory: one chunk's residuals + T/chunk checkpoints.
+
+The Pallas kernel (kernel.py) is the TPU forward; the chunked form is the
+differentiation path on every backend (pallas_call has no VJP).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+DEFAULT_CHUNK = 256
+
+
+def _chunk_div(t: int, cap: int) -> int:
+    for c in range(min(cap, t), 0, -1):
+        if t % c == 0:
+            return c
+    return 1
+
+
+def _fwd_chunks(r, k, v, w, u, s0, chunk: int):
+    """Scan over chunks; returns (out, s_final, s_checkpoints)."""
+    B, H, T, N = r.shape
+    nc = T // chunk
+
+    def split(x):
+        return jnp.moveaxis(
+            x.reshape(B, H, nc, chunk, N), 2, 0
+        )  # (nc, B, H, chunk, N)
+
+    xs = (split(r), split(k), split(v), split(w))
+    # Forward chunks are never differentiated through (custom_vjp), so the
+    # Pallas kernel is usable on TPU; the ref scan elsewhere.
+    inner = (
+        kernel.rwkv6_scan_pallas
+        if jax.default_backend() == "tpu"
+        else ref.rwkv6_scan_ref
+    )
+
+    def step(S, inp):
+        r_c, k_c, v_c, w_c = inp
+        o_c, S_out = inner(r_c, k_c, v_c, w_c, u, S)
+        return S_out, (o_c, S)
+
+    s_final, (outs, s_ckpts) = jax.lax.scan(step, s0, xs)
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, T, N)
+    return out, s_final, s_ckpts  # s_ckpts: (nc, B, H, N, N) chunk-initial
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _rwkv6(r, k, v, w, u, s0, chunk):
+    out, s_final, _ = _fwd_chunks(r, k, v, w, u, s0, chunk)
+    return out, s_final
+
+
+def _rwkv6_fwd(r, k, v, w, u, s0, chunk):
+    out, s_final, s_ckpts = _fwd_chunks(r, k, v, w, u, s0, chunk)
+    return (out, s_final), (r, k, v, w, u, s_ckpts)
+
+
+def _rwkv6_bwd(chunk, res, cots):
+    r, k, v, w, u, s_ckpts = res
+    do, ds_final = cots
+    B, H, T, N = r.shape
+    nc = T // chunk
+
+    def split(x):
+        return jnp.moveaxis(x.reshape(B, H, nc, chunk, N), 2, 0)
+
+    xs = (split(r), split(k), split(v), split(w), split(do), s_ckpts)
+
+    def chunk_vjp(r_c, k_c, v_c, w_c, u_, s_in, do_c, ds_out):
+        f = lambda rr, kk, vv, ww, uu, ss: ref.rwkv6_scan_ref(rr, kk, vv, ww, uu, ss)
+        _, vjp = jax.vjp(f, r_c, k_c, v_c, w_c, u_, s_in)
+        return vjp((do_c, ds_out))  # (dr, dk, dv, dw, du, ds_in)
+
+    def step(carry, inp):
+        ds, du_acc = carry
+        r_c, k_c, v_c, w_c, do_c, s_in = inp
+        dr, dk, dv, dw, du, ds_in = chunk_vjp(r_c, k_c, v_c, w_c, u, s_in, do_c, ds)
+        return (ds_in, du_acc + du), (dr, dk, dv, dw)
+
+    (ds0, du_total), grads = jax.lax.scan(
+        step, (ds_final, jnp.zeros_like(u, jnp.float32)), xs, reverse=True
+    )
+    dr, dk, dv, dw = (
+        jnp.moveaxis(g, 0, 2).reshape(B, H, T, N) for g in grads
+    )
+    return dr, dk, dv, dw, du_total.astype(u.dtype), ds0
+
+
+_rwkv6.defvjp(_rwkv6_fwd, _rwkv6_bwd)
+
+
+def rwkv6_scan(
+    r: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,
+    s0: jnp.ndarray | None = None,
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """(out, final_state) for the RWKV-6 recurrence. See ref.py.
+
+    Differentiable on every backend via the chunk-checkpointed custom VJP;
+    on TPU the (inference) forward uses the Pallas kernel.
+    """
+    B, H, T, N = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas and T == 1:
+        # decode fast-path: single token, no AD
+        return kernel.rwkv6_scan_pallas(r, k, v, w, u, s0, interpret=interpret)
+    c = _chunk_div(T, chunk)
+    return _rwkv6(
+        r,
+        k.astype(r.dtype),
+        v.astype(r.dtype),
+        w.astype(jnp.float32),
+        u.astype(jnp.float32),
+        s0.astype(jnp.float32),
+        c,
+    )

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the RWKV-6 (Finch) recurrence.
+
+Per head with state S in R^{N x N} (key dim x value dim):
+
+  o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+
+with data-dependent decay w_t in (0,1) (already exp(-exp(.))-mapped by the
+caller) and per-head bonus u.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(
+    r: jnp.ndarray,  # (B, H, T, N)
+    k: jnp.ndarray,  # (B, H, T, N)
+    v: jnp.ndarray,  # (B, H, T, N)
+    w: jnp.ndarray,  # (B, H, T, N) decay in (0, 1)
+    u: jnp.ndarray,  # (H, N) bonus
+    s0: jnp.ndarray | None = None,  # (B, H, N, N) initial state
+):
+    B, H, T, N = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def per_head(r_h, k_h, v_h, w_h, u_h, s_h):
+        # r_h etc: (T, N); u_h: (N,); s_h: (N, N)
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[:, None] * v_t[None, :]  # (N, N)
+            out = ((S + u_h[:, None] * kv) * r_t[:, None]).sum(axis=0)  # (N,)
+            S = w_t[:, None] * S + kv
+            return S, out
+        S, out = jax.lax.scan(step, s_h, (r_h, k_h, v_h, w_h))
+        return out, S
+
+    f = jax.vmap(  # over H
+        per_head, in_axes=(0, 0, 0, 0, 0, 0), out_axes=(0, 0)
+    )
+    f = jax.vmap(  # over B
+        f, in_axes=(0, 0, 0, 0, None, 0), out_axes=(0, 0)
+    )
+    out, s_final = f(
+        r.astype(jnp.float32),
+        k.astype(jnp.float32),
+        v.astype(jnp.float32),
+        w.astype(jnp.float32),
+        u.astype(jnp.float32),
+        s0.astype(jnp.float32),
+    )
+    return out.astype(r.dtype), s_final

@@ -1,0 +1,404 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import: jax locks the device
+count at first init, and the production meshes need 512 host devices
+(2 pods x 16 x 16). Smoke tests / benches never import this module.
+
+Per cell this driver:
+  1. builds the jitted step (train_step for train shapes; prefill/serve
+     steps for inference shapes) with the production shardings,
+  2. .lower(**input_specs).compile() — proving the distribution config is
+     coherent (no sharding mismatch / unsupported collective / OOM-at-
+     compile),
+  3. records compiled.memory_analysis() (fits-per-device proof) and
+     compiled.cost_analysis() + parsed collective bytes for §Roofline,
+  4. optionally re-lowers 1- and 2-superblock slices for the scan-aware
+     roofline reconstruction (rooftool.two_point).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun.json [--roofline]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.base import SHAPES, ArchConfig, ShapeSpec, shapes_for
+from repro.distributed import sharding as shd
+from repro.launch import rooftool
+from repro.launch.mesh import make_production_mesh
+from repro.models import LM
+from repro.optim import AdamW, AdamWConfig
+from repro.train import steps as train_steps
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; no allocation)
+# --------------------------------------------------------------------------
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    f32 = jnp.float32
+    if shape.kind == "train":
+        batch: Dict[str, Any] = {}
+        if cfg.embed_inputs:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+            batch["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.n_image_tokens:
+            batch["images"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.embed_inputs:
+            batch["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.n_image_tokens:
+            batch["images"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16
+            )
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    batch = {}
+    if cfg.embed_inputs:
+        batch["embeds"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return batch
+
+
+# --------------------------------------------------------------------------
+# cell lowering
+# --------------------------------------------------------------------------
+
+
+def _cost(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def _train_rules_for(cfg: ArchConfig, shape: ShapeSpec, multi_pod: bool):
+    """(rules, grad_accum) for a train cell.
+
+    - Megatron-SP residual stream when stacked scan carries dominate HBM
+      (skipped for MoE: dispatch grouping crosses the seq sharding and the
+      round-trips regressed memory — §Perf).
+    - microbatch grad accumulation to bound per-pass activation memory.
+    """
+    rules = shd.train_rules(multi_pod)
+    dp = (2 * 16) if multi_pod else 16
+    b_loc = shape.global_batch / dp
+    carry_bytes = cfg.n_superblocks * b_loc * shape.seq_len * cfg.d_model * 2
+    is_moe = "moe" in cfg.pattern
+    if carry_bytes > 8e9 and not is_moe:
+        rules = {**rules, "act_seq": ("model",)}
+        carry_bytes /= 16
+    # Working set ~ carries + a few per-layer activation copies.
+    work = carry_bytes + 10 * b_loc * shape.seq_len * cfg.d_model * 2
+    accum = 1
+    while work / accum > 6e9 and accum < max(1, int(b_loc)):
+        accum *= 2
+    return rules, accum
+
+
+def _serve_rules_for(cfg: ArchConfig, multi_pod: bool):
+    """Weight-gathered serving for models too big for 16-way TP alone."""
+    rules = shd.serve_rules(multi_pod)
+    if cfg.param_count() * 2 / 16 > 12e9:
+        rules = {**rules, "embed": ("data",)}
+    return rules
+
+
+def lower_cell(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh,
+    *,
+    multi_pod: bool,
+    hlo: bool = True,
+    train_override=None,  # (rules, grad_accum) for roofline depth slices
+) -> Dict[str, Any]:
+    lm = LM(cfg)
+    t0 = time.time()
+    if shape.kind == "train":
+        opt = AdamW(AdamWConfig())
+        rules, grad_accum = train_override or _train_rules_for(cfg, shape, multi_pod)
+        step, state_shardings, batch_sh = train_steps.build_train_step(
+            lm, opt, mesh, rules=rules, remat=True, grad_accum=grad_accum,
+            multi_pod=multi_pod,
+        )
+        state_shapes, _ = train_steps.train_state_shardings(lm, opt, mesh, rules)
+        batch = input_specs(cfg, shape)
+        # The jit was built inside build_train_step; lower with
+        # sharding-attached ShapeDtypeStructs (=> in_shardings).
+        lowered = step.lower(
+            jax.tree_util.tree_map(
+                lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+                state_shapes,
+                state_shardings,
+            ),
+            jax.tree_util.tree_map(
+                lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+                batch,
+                batch_sh(batch),
+            ),
+        )
+    elif shape.kind == "prefill":
+        step, info = train_steps.build_prefill_step(
+            lm,
+            mesh,
+            _serve_rules_for(cfg, multi_pod),
+            s_max=shape.seq_len,
+            batch_size=shape.global_batch,
+            multi_pod=multi_pod,
+        )
+        batch = input_specs(cfg, shape)
+        params_shapes = jax.eval_shape(
+            lambda k: lm.init(k, dtype=jnp.bfloat16), jax.random.PRNGKey(0)
+        )
+        lowered = step.lower(
+            jax.tree_util.tree_map(
+                lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+                params_shapes,
+                info["params"],
+            ),
+            jax.tree_util.tree_map(
+                lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+                batch,
+                info["batch"](batch),
+            ),
+        )
+    else:  # decode
+        step, info = train_steps.build_decode_step(
+            lm, mesh, _serve_rules_for(cfg, multi_pod), multi_pod=multi_pod
+        )
+        batch = input_specs(cfg, shape)
+        params_shapes = jax.eval_shape(
+            lambda k: lm.init(k, dtype=jnp.bfloat16), jax.random.PRNGKey(0)
+        )
+        cache = lm.cache_spec_tree(shape.global_batch, shape.seq_len)
+        lengths = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        lowered = step.lower(
+            jax.tree_util.tree_map(
+                lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+                params_shapes,
+                info["params"],
+            ),
+            jax.tree_util.tree_map(
+                lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+                batch,
+                info["batch"](batch),
+            ),
+            jax.tree_util.tree_map(
+                lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+                cache,
+                info["cache"](cache),
+            ),
+            jax.ShapeDtypeStruct(
+                lengths.shape, lengths.dtype,
+                sharding=shd.batch_spec_tree(lengths, mesh, info["rules"]),
+            ),
+        )
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    flops, byts = _cost(compiled)
+    ma = compiled.memory_analysis()
+    rec: Dict[str, Any] = {
+        "arch": cfg.name,
+        "shape": shape.name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": int(np.prod(list(mesh.shape.values()))),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_dev": flops,
+        "bytes_dev": byts,
+        "arg_bytes_dev": getattr(ma, "argument_size_in_bytes", None),
+        "out_bytes_dev": getattr(ma, "output_size_in_bytes", None),
+        "temp_bytes_dev": getattr(ma, "temp_size_in_bytes", None),
+        "alias_bytes_dev": getattr(ma, "alias_size_in_bytes", None),
+    }
+    if hlo:
+        txt = compiled.as_text()
+        rec["collectives"] = rooftool.collective_bytes(txt)
+        rec["hlo_chars"] = len(txt)
+    return rec
+
+
+def reduced_depth(cfg: ArchConfig, n_superblocks: int) -> ArchConfig:
+    """Same config with a different scanned depth (for two-point roofline)."""
+    n_layers = len(cfg.pattern) * n_superblocks + len(cfg.remainder)
+    return dataclasses.replace(cfg, n_layers=n_layers)
+
+
+def roofline_cell(cfg, shape, mesh, *, multi_pod: bool) -> Dict[str, Any]:
+    """Scan-aware roofline reconstruction for one cell.
+
+    XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+    count, so we lower depth-0 (no scanned superblocks; remainder layers +
+    embed/head only) and depth-1 slices: their difference is exactly one
+    superblock, and total = f(0) + n_superblocks * (f(1) - f(0)). Train
+    slices force grad_accum=1 (the microbatch scan is a second while loop)
+    and inherit the FULL config's sharding rules so the per-block profile
+    matches production.
+    """
+    override = None
+    if shape.kind == "train":
+        rules, _ = _train_rules_for(cfg, shape, multi_pod)
+        override = (rules, 1)
+    r0 = lower_cell(
+        reduced_depth(cfg, 0), shape, mesh, multi_pod=multi_pod,
+        train_override=override,
+    )
+    r1 = lower_cell(
+        reduced_depth(cfg, 1), shape, mesh, multi_pod=multi_pod,
+        train_override=override,
+    )
+    n = cfg.n_superblocks
+    per = lambda a, b: max(0.0, b - a)  # noqa: E731
+    flops = r0["flops_dev"] + per(r0["flops_dev"], r1["flops_dev"]) * n
+    byts = r0["bytes_dev"] + per(r0["bytes_dev"], r1["bytes_dev"]) * n
+    c0 = sum(v for k, v in r0["collectives"].items() if k != "count")
+    c1 = sum(v for k, v in r1["collectives"].items() if k != "count")
+    coll = c0 + per(c0, c1) * n
+    chips = int(np.prod(list(mesh.shape.values())))
+    cell = rooftool.CellAnalysis(
+        flops_dev=flops,
+        bytes_dev=byts,
+        coll_bytes_dev=coll,
+        coll_by_type=r1["collectives"],
+        chips=chips,
+    )
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = rooftool.model_flops(cfg.active_param_count(), tokens, shape.kind)
+    out = cell.summary()
+    out["model_flops_total"] = mf
+    out["model_flops_dev"] = mf / chips
+    out["useful_ratio"] = (mf / chips) / max(flops, 1.0)
+    return out
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+def run(
+    archs,
+    shape_names,
+    meshes,
+    out_path: Optional[str],
+    roofline: bool,
+    full: bool = True,
+):
+    results = []
+    for mesh_kind in meshes:
+        multi_pod = mesh_kind == "multi"
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        for arch in archs:
+            cfg = configs.get_config(arch)
+            valid = shapes_for(cfg)
+            for sname in shape_names:
+                if sname not in valid:
+                    results.append(
+                        {
+                            "arch": arch,
+                            "shape": sname,
+                            "mesh": "2x16x16" if multi_pod else "16x16",
+                            "status": "skipped",
+                            "reason": "long_500k requires sub-quadratic attention",
+                        }
+                    )
+                    print(f"[skip] {arch} x {sname} ({mesh_kind})", flush=True)
+                    continue
+                shape = SHAPES[sname]
+                try:
+                    if full:
+                        rec = lower_cell(cfg, shape, mesh, multi_pod=multi_pod)
+                        rec["status"] = "ok"
+                    else:
+                        rec = {
+                            "arch": arch,
+                            "shape": sname,
+                            "mesh": "2x16x16" if multi_pod else "16x16",
+                        }
+                    if roofline and not multi_pod:
+                        rec["roofline"] = roofline_cell(
+                            cfg, shape, mesh, multi_pod=multi_pod
+                        )
+                        rec["status"] = "ok"
+                    print(
+                        f"[ok]   {arch} x {sname} ({mesh_kind}) "
+                        f"compile={rec.get('compile_s', 0)}s "
+                        f"temp={(rec.get('temp_bytes_dev') or 0)/1e9:.2f}GB",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001 - report, continue
+                    rec = {
+                        "arch": arch,
+                        "shape": sname,
+                        "mesh": "2x16x16" if multi_pod else "16x16",
+                        "status": "error",
+                        "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[FAIL] {arch} x {sname} ({mesh_kind}): {e}", flush=True)
+                results.append(rec)
+                if out_path:
+                    with open(out_path, "w") as f:
+                        json.dump(results, f, indent=1)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--roofline", action="store_true")
+    ap.add_argument(
+        "--roofline-only", action="store_true",
+        help="skip the full-depth compile; only the two-point slices",
+    )
+    args = ap.parse_args()
+
+    archs = configs.list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": ["single"], "multi": ["multi"], "both": ["single", "multi"]}[
+        args.mesh
+    ]
+    run(
+        archs,
+        shapes,
+        meshes,
+        args.out,
+        roofline=args.roofline or args.roofline_only,
+        full=not args.roofline_only,
+    )
+
+
+if __name__ == "__main__":
+    main()

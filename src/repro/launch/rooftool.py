@@ -1,0 +1,145 @@
+"""Roofline analysis from compiled dry-run artifacts (no wall clock).
+
+Hardware model: TPU v5e-class chip — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment constants).
+
+Methodology (DESIGN.md §7):
+- `compiled.cost_analysis()` FLOPs / bytes are per-device and count scan
+  bodies ONCE (verified empirically on jax 0.8.2). We therefore lower each
+  cell at depth L1 = 1 superblock and L2 = 2 superblocks and reconstruct
+    per_block = f(L2) - f(L1);  total(L) = f(L1) + (L - 1) * per_block
+  which is exact for scanned stacks (remainder layers cancel into f(L1)).
+- collective bytes: parse the post-SPMD HLO (`compiled.as_text()`), sum
+  the output-shape bytes of all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute ops (shard shapes => per-device bytes),
+  with the same two-point reconstruction for in-scan collectives.
+- terms (seconds):
+    compute    = FLOPs_dev / 197e12
+    memory     = HBM_bytes_dev / 819e9
+    collective = collective_bytes_dev / 50e9      (slowest-link proxy)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s/link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string like 'bf16[128,1024]{1,0}' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes by collective type, from post-SPMD HLO text."""
+    out = {k: 0 for k in COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # '%name = <shape> <op>(' — match the op position to avoid hits in
+        # metadata/comments.
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([a-z\-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(2)
+        base = next(
+            (c for c in COLLECTIVES if op == c or op.startswith(c + "-")), None
+        )
+        if base is None:
+            continue
+        if op.endswith("-done"):
+            continue  # paired with its -start; count the payload once
+        out[base] += _shape_bytes(m.group(1))
+        out["count"] += 1
+    return out
+
+
+@dataclasses.dataclass
+class CellAnalysis:
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    coll_by_type: Dict[str, int]
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def summary(self) -> Dict:
+        return {
+            "flops_dev": self.flops_dev,
+            "bytes_dev": self.bytes_dev,
+            "coll_bytes_dev": self.coll_bytes_dev,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "coll_by_type": self.coll_by_type,
+        }
+
+
+def two_point(f1: float, f2: float, n_blocks: int) -> float:
+    """total(n) from measurements at 1 and 2 scanned superblocks."""
+    per_block = max(0.0, f2 - f1)
+    return f1 + per_block * (n_blocks - 1)
+
+
+def model_flops(
+    n_params_active: float, tokens: float, kind: str
+) -> float:
+    """Analytic MODEL_FLOPS: 6ND train, 2ND forward-only."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_params_active * tokens

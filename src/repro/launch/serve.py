@@ -1,0 +1,101 @@
+"""Serving driver: batched prefill + decode with a continuous batch.
+
+Implements the inference side of the framework: a request queue, batched
+prefill, per-step batched decode against sharded KV caches/recurrent
+state, and simple greedy/temperature sampling. On CPU this drives reduced
+models (examples/serve_lm.py); the decode step is the same function the
+dry-run lowers at decode_32k/long_500k scale.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --reduce 8 \
+      --requests 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.launch.train import reduce_config
+from repro.models import LM
+from repro.train import steps as train_steps
+
+
+def sample(logits: jnp.ndarray, key, temperature: float = 0.0) -> jnp.ndarray:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def serve_batch(
+    lm: LM,
+    params,
+    prompts: np.ndarray,  # (B, P) token prompts
+    gen_tokens: int,
+    mesh,
+    *,
+    temperature: float = 0.0,
+    seed: int = 0,
+):
+    """Prefill + decode `gen_tokens` for a batch; returns (B, gen) tokens."""
+    B, P = prompts.shape
+    s_max = P + gen_tokens
+    decode_fn, info = train_steps.build_decode_step(lm, mesh)
+
+    with shd.activation_ctx(mesh, info["rules"]):
+        logits, cache, lengths = lm.prefill(params, {"tokens": jnp.asarray(prompts)}, s_max=s_max)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    tok = sample(logits, key, temperature)
+    out.append(tok)
+    for i in range(gen_tokens - 1):
+        key, sub = jax.random.split(key)
+        logits, cache, lengths = decode_fn(
+            params, {"tokens": tok[:, None]}, cache, lengths
+        )
+        tok = sample(logits, sub, temperature)
+        out.append(tok)
+    return np.stack([np.asarray(t) for t in out], axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduce", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--mesh", default="1x1")
+    args = ap.parse_args(argv)
+
+    cfg = reduce_config(configs.get_config(args.arch), args.reduce)
+    lm = LM(cfg)
+    dm, tm = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((dm, tm), ("data", "model"))
+
+    params = lm.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(args.requests, args.prompt_len))
+
+    t0 = time.time()
+    tokens = serve_batch(
+        lm, params, prompts, args.gen, mesh, temperature=args.temperature
+    )
+    dt = time.time() - t0
+    total = args.requests * args.gen
+    print(f"[serve] arch={cfg.name} generated {total} tokens in {dt:.2f}s "
+          f"({total/dt:.1f} tok/s)")
+    for r in range(min(2, args.requests)):
+        print(f"[serve] req{r}: {tokens[r].tolist()}")
+    return tokens
+
+
+if __name__ == "__main__":
+    main()

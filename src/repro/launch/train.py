@@ -1,0 +1,144 @@
+"""Training driver: NoMora-scheduled, fault-tolerant LM training.
+
+Runs a (reduced or full) architecture on the local device mesh with the
+production train step: FSDP+TP sharding, remat, checkpoint/restart, and
+synthetic data. On this CPU container it drives ~100M-class models for a
+few hundred steps (examples/train_lm.py); on a real cluster the same entry
+point scales to the production meshes (launch/dryrun.py proves lowering).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b \
+      --reduce 4 --steps 100 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLMData
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh
+from repro.models import LM
+from repro.optim import AdamW, AdamWConfig, cosine_schedule
+from repro.train import steps as train_steps
+
+
+def reduce_config(cfg, factor: int):
+    """Scale a config down by ~factor in width/depth (CPU-runnable)."""
+    if factor <= 1:
+        return cfg
+    pat = len(cfg.pattern)
+    n_layers = max(pat, (cfg.n_layers // factor) // pat * pat) + len(cfg.remainder)
+    d_model = max(64, cfg.d_model // factor)
+    rwkv_head_dim = min(cfg.rwkv_head_dim, 32)
+    n_heads = max(2, cfg.n_heads // factor)
+    n_kv_heads = max(1, min(cfg.n_kv_heads, n_heads))
+    if "rwkv" in cfg.pattern:
+        # RWKV projections are (D, D): heads must tile d_model exactly.
+        n_heads = max(1, d_model // rwkv_head_dim)
+        n_kv_heads = n_heads
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        d_model=d_model,
+        n_heads=n_heads,
+        n_kv_heads=n_kv_heads,
+        head_dim=max(16, cfg.head_dim // factor),
+        d_ff=max(128, cfg.d_ff // factor),
+        vocab_size=min(cfg.vocab_size, 4096),
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2) if cfg.n_experts else 0,
+        rnn_width=max(64, cfg.rnn_width // factor) if cfg.rnn_width else 0,
+        local_window=min(cfg.local_window, 128) if cfg.local_window else 0,
+        n_image_tokens=min(cfg.n_image_tokens, 16) if cfg.n_image_tokens else 0,
+        rwkv_head_dim=rwkv_head_dim,
+    )
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduce", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--data-mode", default="markov")
+    ap.add_argument("--mesh", default="1x1", help="dataxmodel, e.g. 2x2")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = reduce_config(configs.get_config(args.arch), args.reduce)
+    lm = LM(cfg)
+    dm, tm = (int(x) for x in args.mesh.split("x"))
+    mesh = make_mesh((dm, tm), ("data", "model"))
+    rules = shd.train_rules(False)
+
+    opt = AdamW(
+        AdamWConfig(lr=args.lr),
+        schedule=cosine_schedule(args.lr, warmup_steps=10, total_steps=args.steps),
+    )
+    step_fn, state_shardings, batch_sh = train_steps.build_train_step(
+        lm, opt, mesh, remat=True, multi_pod=False
+    )
+
+    data = SyntheticLMData(
+        DataConfig(
+            vocab_size=cfg.vocab_size,
+            seq_len=args.seq,
+            global_batch=args.batch,
+            mode=args.data_mode,
+        )
+    )
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start_step = 0
+    state = None
+    if ckpt and args.resume and ckpt.latest_step() is not None:
+        template = jax.eval_shape(
+            lambda k: opt.init(lm.init(k, dtype=jnp.float32)), jax.random.PRNGKey(0)
+        )
+        state = ckpt.restore(template, shardings=state_shardings)
+        start_step = int(np.asarray(state.step))
+        print(f"[train] resumed from step {start_step}")
+    if state is None:
+        params = lm.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+        state = opt.init(params)
+        state = jax.device_put(state, state_shardings)
+
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(state.params))
+    print(f"[train] arch={cfg.name} params={n_params/1e6:.1f}M mesh={mesh.shape} "
+          f"steps={args.steps}")
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        state, metrics = step_fn(state, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            dt = time.time() - t0
+            print(f"[train] step={step} loss={loss:.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f} ({dt:.1f}s)", flush=True)
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, state)
+    if ckpt:
+        ckpt.save(args.steps, state, blocking=True)
+    print(f"[train] done: first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: a unified scanned-superblock decoder covering all ten
+assigned architectures (dense GQA / MoE / RWKV-6 / RG-LRU hybrid / audio
+backbone / cross-attention VLM)."""
+
+from .lm import LM  # noqa: F401

@@ -1,0 +1,191 @@
+"""Attention sequence mixing: global causal, local (sliding window), cross.
+
+Backend strategy:
+- TPU: the Pallas flash/decode kernels (repro.kernels.*).
+- XLA fallback (CPU dry-run / tests): a *chunked* online-softmax
+  implementation (lax.scan over query chunks) whose peak memory is
+  O(chunk x S) instead of O(S^2) — the same working-set shape the flash
+  kernel claims, so the dry-run memory analysis is representative.
+- GQA everywhere via grouped einsum, never `jnp.repeat`: materialising
+  K/V at H heads forced involuntary full re-sharding in SPMD (replicate-
+  then-repartition warnings) and dominated big-model prefill memory
+  (EXPERIMENTS.md §Perf H10). q is viewed as (B, KVH, G, S, D) and K/V
+  stay at KVH heads.
+- Local attention reshapes into window-sized chunks attending to
+  (previous, self) chunk pairs: O(S x 2W) logits.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import ops as decode_ops
+from repro.kernels.flash_attention import ops as flash_ops
+
+NEG_INF = -1e30
+CHUNK = 1024  # XLA-fallback query chunk
+
+
+def _group_q(q, kvh):
+    B, H, S, D = q.shape
+    return q.reshape(B, kvh, H // kvh, S, D)
+
+
+def _gqa_full(q, k, v, scale, causal):
+    """Grouped-query softmax attention, logits materialised (small S)."""
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    qg = _group_q(q, KVH).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgqd,bkcd->bkgqc", qg, kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum("bkgqc,bkcd->bkgqd", p, vf) / p.sum(axis=-1, keepdims=True)
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def _chunked_causal(q, k, v, scale):
+    """(B,H,S,D) causal GQA attention, scanned over q chunks (fp32)."""
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    if S <= CHUNK:
+        return _gqa_full(q, k, v, scale, causal=True)
+    assert S % CHUNK == 0
+    nc = S // CHUNK
+    qg = _group_q(q, KVH)
+    qc = qg.reshape(B, KVH, H // KVH, nc, CHUNK, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def chunk_step(_, ci):
+        qi = qc[:, :, :, ci].astype(jnp.float32)  # (B,KVH,G,C,D)
+        logits = jnp.einsum("bkgqd,bkcd->bkgqc", qi, kf) * scale
+        rows = ci * CHUNK + jnp.arange(CHUNK)[:, None]
+        cols = jnp.arange(S)[None, :]
+        logits = jnp.where(rows >= cols, logits, NEG_INF)
+        m = logits.max(axis=-1, keepdims=True)
+        p = jnp.exp(logits - m)
+        out = jnp.einsum("bkgqc,bkcd->bkgqd", p, vf) / p.sum(axis=-1, keepdims=True)
+        return None, out
+
+    _, outs = jax.lax.scan(chunk_step, None, jnp.arange(nc))
+    # outs: (nc, B, KVH, G, C, D) -> (B, H, S, D)
+    outs = jnp.moveaxis(outs, 0, 3)  # (B, KVH, G, nc, C, D)
+    return outs.reshape(B, H, S, D).astype(q.dtype)
+
+
+def causal_attention(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, KVH, S, D)
+    v: jnp.ndarray,
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    if jax.default_backend() == "tpu":
+        return flash_ops.flash_attention(q, k, v, causal=True, scale=scale)
+    return _chunked_causal(q, k, v, scale)
+
+
+def local_attention(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, KVH, S, D)
+    v: jnp.ndarray,
+    window: int,
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Sliding-window causal attention (each query sees <= `window` keys).
+
+    Chunked into W-sized blocks attending to (previous, self) blocks:
+    O(S * 2W) logits; K/V stay at KVH heads (GQA grouped einsum).
+    """
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    G = H // KVH
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    if S <= window:
+        return causal_attention(q, k, v, scale=scale)
+    if S % window:
+        pad = window - S % window
+        qp = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        return local_attention(qp, kp, vp, window, scale=scale)[:, :, :S]
+    nc = S // window
+    qc = _group_q(q, KVH).reshape(B, KVH, G, nc, window, D).astype(jnp.float32)
+    kc = k.reshape(B, KVH, nc, window, D).astype(jnp.float32)
+    vc = v.reshape(B, KVH, nc, window, D).astype(jnp.float32)
+    kprev = jnp.concatenate([jnp.zeros_like(kc[:, :, :1]), kc[:, :, :-1]], axis=2)
+    vprev = jnp.concatenate([jnp.zeros_like(vc[:, :, :1]), vc[:, :, :-1]], axis=2)
+    kk = jnp.concatenate([kprev, kc], axis=3)  # (B,KVH,nc,2W,D)
+    vv = jnp.concatenate([vprev, vc], axis=3)
+    logits = jnp.einsum("bkgcqd,bkcod->bkgcqo", qc, kk) * scale
+    qpos = jnp.arange(window)[:, None] + window
+    kpos = jnp.arange(2 * window)[None, :]
+    ok = (kpos <= qpos) & (kpos > qpos - window)
+    first = jnp.arange(2 * window)[None, :] >= window  # chunk 0: self only
+    mask = jnp.where(
+        (jnp.arange(nc) == 0)[:, None, None], ok[None] & first[None], ok[None]
+    )  # (nc, W, 2W)
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum("bkgcqo,bkcod->bkgcqd", p, vv) / p.sum(axis=-1, keepdims=True)
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def cross_attention(
+    q: jnp.ndarray,  # (B, H, S, D)
+    k: jnp.ndarray,  # (B, KVH, Simg, D)
+    v: jnp.ndarray,
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    qg = _group_q(q, KVH).astype(jnp.float32)
+    logits = jnp.einsum("bkgqd,bkcd->bkgqc", qg, k.astype(jnp.float32)) * scale
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqc,bkcd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, D).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,  # (B, H, D)
+    k_cache: jnp.ndarray,  # (B, KVH, S, D)
+    v_cache: jnp.ndarray,
+    lengths: jnp.ndarray,  # (B,)
+    *,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    if jax.default_backend() == "tpu":
+        return decode_ops.decode_attention(q, k_cache, v_cache, lengths, scale=scale)
+    # grouped-einsum fallback (no KV repeat)
+    B, H, D = q.shape
+    KVH, S = k_cache.shape[1], k_cache.shape[2]
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    qg = q.reshape(B, KVH, H // KVH, D).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bkgd,bkcd->bkgc", qg, k_cache.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(S)[None, None, None, :] < lengths[:, None, None, None]
+    logits = jnp.where(mask, logits, -jnp.inf)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)
+    out = jnp.einsum("bkgc,bkcd->bkgd", p, v_cache.astype(jnp.float32)) / p.sum(
+        axis=-1, keepdims=True
+    )
+    return out.reshape(B, H, D).astype(q.dtype)

@@ -1,0 +1,668 @@
+"""Layer blocks for every architecture family.
+
+Each block kind provides:
+  specs(cfg)                         -> dict of Param specs (+ logical axes)
+  apply_seq(cfg, p, x, ...)          -> (y, cache_entry)   full-sequence mode
+  apply_decode(cfg, p, x, cache, ..) -> (y, cache_entry)   one-token mode
+
+Kinds: dense (attn+FFN), local_attn (windowed attn+FFN), cross
+(cross-attn+FFN, VLM), moe (attn+MoE FFN), rec (RG-LRU recurrent block +
+FFN), rwkv (RWKV-6 time-mix + channel-mix).
+
+Caches are preallocated by LM.init_cache and threaded through scans; decode
+updates in place via dynamic_update_slice.
+
+Simplifications vs. upstream checkpoints (recorded in DESIGN.md):
+- RWKV-6 token-shift mixing uses static per-channel ratios (the v6
+  data-dependent lerp LoRA is kept only for the decay w, its defining
+  feature); channel-mix follows the v6 squared-relu form.
+- RG-LRU input/recurrence gates use diagonal weights (Griffin's
+  block-diagonal approximation at block size 1).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.kernels.rglru_scan import ops as rglru_ops
+from repro.kernels.rwkv6_scan import ops as rwkv_ops
+
+from . import attention
+from .layers import Param, activation_fn, rms_norm, rope
+
+RGLRU_C = 8.0  # Griffin's recurrence-gate temperature
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ArchConfig, cross: bool = False) -> Dict[str, Param]:
+    D = cfg.d_model
+    s: Dict[str, Param] = {
+        "wq": Param((D, cfg.q_dim), ("embed", "heads")),
+        "wk": Param((D, cfg.kv_dim), ("embed", "kv_heads")),
+        "wv": Param((D, cfg.kv_dim), ("embed", "kv_heads")),
+        "wo": Param((cfg.q_dim, D), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = Param((cfg.head_dim,), (None,), init="zeros")
+        s["k_norm"] = Param((cfg.head_dim,), (None,), init="zeros")
+    if cross:
+        s["gate"] = Param((1,), (None,), init="zeros")  # llama3.2-style tanh gate
+    return s
+
+
+def _ffn_specs(cfg: ArchConfig) -> Dict[str, Param]:
+    D, F = cfg.d_model, cfg.d_ff
+    s = {
+        "w1": Param((D, F), ("embed", "mlp")),
+        "w2": Param((F, D), ("mlp", "embed")),
+    }
+    if cfg.activation == "swiglu":
+        s["w3"] = Param((D, F), ("embed", "mlp"))
+    return s
+
+
+def _moe_specs(cfg: ArchConfig) -> Dict[str, Param]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    s = {
+        "router": Param((D, E), ("embed", None)),
+        "we1": Param((E, D, F), ("experts", "embed", None)),
+        "we2": Param((E, F, D), ("experts", None, "embed")),
+    }
+    if cfg.activation == "swiglu":
+        s["we3"] = Param((E, D, F), ("experts", "embed", None))
+    if cfg.shared_expert:
+        s["shared"] = _ffn_specs(cfg)
+    return s
+
+
+def _rec_specs(cfg: ArchConfig) -> Dict[str, Param]:
+    D = cfg.d_model
+    R = cfg.rnn_width or D
+    return {
+        "wx": Param((D, R), ("embed", "rnn")),
+        "wgate": Param((D, R), ("embed", "rnn")),
+        "conv": Param((cfg.conv_width, R), (None, "rnn"), scale=cfg.conv_width**-0.5),
+        "wa_diag": Param((R,), ("rnn",), init="zeros"),
+        "ba": Param((R,), ("rnn",), init="zeros"),
+        "wi_diag": Param((R,), ("rnn",), init="zeros"),
+        "bi": Param((R,), ("rnn",), init="zeros"),
+        "lam": Param((R,), ("rnn",), init="normal", scale=1.0),
+        "wo": Param((R, D), ("rnn", "embed")),
+    }
+
+
+def _rwkv_specs(cfg: ArchConfig) -> Dict[str, Param]:
+    D, F = cfg.d_model, cfg.d_ff
+    H = cfg.n_heads
+    N = cfg.rwkv_head_dim
+    lora = 64
+    return {
+        "mu": Param((5, D), (None, "embed"), init="zeros"),  # r,k,v,g,w shifts
+        "wr": Param((D, D), ("embed", "heads")),
+        "wk_": Param((D, D), ("embed", "heads")),
+        "wv_": Param((D, D), ("embed", "heads")),
+        "wg": Param((D, D), ("embed", "heads")),
+        "w0": Param((D,), ("heads",), init="zeros"),
+        "wA": Param((D, lora), ("embed", None)),
+        "wB": Param((lora, D), (None, "heads"), init="zeros"),
+        "u": Param((H, N), ("heads", None), init="zeros"),
+        "ln_x": Param((D,), ("heads",), init="zeros"),
+        "wo": Param((D, D), ("heads", "embed")),
+        "mu_c": Param((2, D), (None, "embed"), init="zeros"),
+        "wc1": Param((D, F), ("embed", "mlp")),
+        "wc2": Param((F, D), ("mlp", "embed")),
+        "wcr": Param((D, D), ("embed", "heads")),
+    }
+
+
+def block_specs(kind: str, cfg: ArchConfig) -> Dict[str, Any]:
+    D = cfg.d_model
+    norm = lambda: Param((D,), ("embed",), init="zeros")  # noqa: E731
+    if kind in ("dense", "local_attn", "cross"):
+        return {
+            "norm_attn": norm(),
+            "attn": _attn_specs(cfg, cross=(kind == "cross")),
+            "norm_ffn": norm(),
+            "ffn": _ffn_specs(cfg),
+        }
+    if kind == "moe":
+        return {
+            "norm_attn": norm(),
+            "attn": _attn_specs(cfg),
+            "norm_ffn": norm(),
+            "moe": _moe_specs(cfg),
+        }
+    if kind == "rec":
+        return {
+            "norm_mix": norm(),
+            "rec": _rec_specs(cfg),
+            "norm_ffn": norm(),
+            "ffn": _ffn_specs(cfg),
+        }
+    if kind == "rwkv":
+        return {
+            "norm_mix": norm(),
+            "norm_ffn": norm(),
+            "rwkv": _rwkv_specs(cfg),
+        }
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# cache specs (shapes only; LM allocates)
+# --------------------------------------------------------------------------
+
+
+def cache_spec(kind: str, cfg: ArchConfig, batch: int, s_max: int):
+    """Shape/dtype spec dict for one layer's decode cache."""
+    Dh, KVH = cfg.head_dim, cfg.n_kv_heads
+    if kind in ("dense", "moe"):
+        return {
+            "k": ((batch, KVH, s_max, Dh), jnp.bfloat16),
+            "v": ((batch, KVH, s_max, Dh), jnp.bfloat16),
+        }
+    if kind == "local_attn":
+        w = min(cfg.local_window, s_max)
+        return {
+            "k": ((batch, KVH, w, Dh), jnp.bfloat16),
+            "v": ((batch, KVH, w, Dh), jnp.bfloat16),
+        }
+    if kind == "cross":
+        n = cfg.n_image_tokens
+        return {
+            "k": ((batch, KVH, n, Dh), jnp.bfloat16),
+            "v": ((batch, KVH, n, Dh), jnp.bfloat16),
+        }
+    if kind == "rec":
+        R = cfg.rnn_width or cfg.d_model
+        return {
+            "h": ((batch, R), jnp.float32),
+            "conv": ((batch, cfg.conv_width - 1, R), jnp.bfloat16),
+        }
+    if kind == "rwkv":
+        H, N = cfg.n_heads, cfg.rwkv_head_dim
+        return {
+            "S": ((batch, H, N, N), jnp.float32),
+            "shift": ((batch, cfg.d_model), jnp.bfloat16),
+            "shift_c": ((batch, cfg.d_model), jnp.bfloat16),
+        }
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# attention blocks
+# --------------------------------------------------------------------------
+
+
+def _split_heads(x, n, d):
+    B, S = x.shape[:2]
+    return x.reshape(B, S, n, d).transpose(0, 2, 1, 3)  # (B, n, S, d)
+
+
+def _merge_heads(x):
+    B, n, S, d = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B, S, n * d)
+
+
+def _qkv(cfg, p, x, positions, *, rope_on=True):
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope_on:
+        q = rope(q, positions[:, None, :], cfg.rope_theta)
+        k = rope(k, positions[:, None, :], cfg.rope_theta)
+    return q, k, v
+
+
+def attn_seq(cfg, p, x, positions, kind, img=None):
+    """Full-sequence attention sublayer. Returns (out, cache_entry)."""
+    if kind == "cross":
+        q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _split_heads(img @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+        v = _split_heads(img @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+        o = attention.cross_attention(q, k, v)
+        out = _merge_heads(o) @ p["wo"]
+        return jnp.tanh(p["gate"]) * out, (k, v)
+    q, k, v = _qkv(cfg, p, x, positions)
+    if kind == "local_attn":
+        o = attention.local_attention(q, k, v, cfg.local_window)
+    else:
+        o = attention.causal_attention(q, k, v)
+    return _merge_heads(o) @ p["wo"], (k, v)
+
+
+def attn_decode(cfg, p, x, positions, kind, cache, lengths, img_kv=None):
+    """One-token attention sublayer against the cache."""
+    B = x.shape[0]
+    if kind == "cross":
+        q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)[:, :, 0]
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k, v = cache["k"], cache["v"]
+        n_img = k.shape[2]
+        o = attention.decode_attention(
+            q, k, v, jnp.full((B,), n_img, jnp.int32)
+        )
+        out = (o.reshape(B, 1, -1)) @ p["wo"]
+        return jnp.tanh(p["gate"]) * out, cache
+    q, k, v = _qkv(cfg, p, x, positions)
+    if kind == "local_attn":
+        w = cache["k"].shape[2]
+        slot = (lengths % w).astype(jnp.int32)
+        valid = jnp.minimum(lengths + 1, w).astype(jnp.int32)
+    else:
+        slot = lengths.astype(jnp.int32)
+        valid = (lengths + 1).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    k_cache = cache["k"].at[bidx, :, slot].set(k[:, :, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[bidx, :, slot].set(v[:, :, 0].astype(cache["v"].dtype))
+    o = attention.decode_attention(q[:, :, 0], k_cache, v_cache, valid)
+    return (o.reshape(B, 1, -1)) @ p["wo"], {"k": k_cache, "v": v_cache}
+
+
+# --------------------------------------------------------------------------
+# FFN / MoE
+# --------------------------------------------------------------------------
+
+
+def ffn_apply(cfg, p, x):
+    act = activation_fn(cfg.activation)
+    h = act(x @ p["w1"])
+    if cfg.activation == "swiglu":
+        h = h * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+MOE_GROUPS = 64  # dispatch groups; aligned to the data axis by constraints
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for g in range(min(cap, n), 0, -1):
+        if n % g == 0:
+            return g
+    return 1
+
+
+def _moe_dispatch(cfg, router, xt):
+    """Group-local dispatch: (G, Tg, D) tokens -> (G, E, cap, D) buffers.
+
+    All gathers/scatters act along the intra-group axis only, so when this
+    runs inside shard_map over the batch axes the indexing is shard-local.
+    Returns (buf, meta) where meta re-combines expert outputs.
+    """
+    G, Tg, D = xt.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    cap = min(int(cfg.moe_capacity_factor * Tg * K / E) + 1, Tg * K)
+
+    logits = (xt @ router).astype(jnp.float32)  # (G, Tg, E)
+    gate_all = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(gate_all, K)  # (G, Tg, K)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = experts.reshape(G, Tg * K)
+    flat_g = gates.reshape(G, Tg * K)
+    flat_tok = jnp.broadcast_to(jnp.repeat(jnp.arange(Tg), K)[None], (G, Tg * K))
+
+    order = jnp.argsort(flat_e, axis=1, stable=True)  # group-local sort
+    e_sorted = jnp.take_along_axis(flat_e, order, axis=1)
+    tok_sorted = jnp.take_along_axis(flat_tok, order, axis=1)
+    g_sorted = jnp.take_along_axis(flat_g, order, axis=1)
+
+    # Segment-relative positions from the sorted order (running max of
+    # first-occurrence indices; O(TgK) memory).
+    ar = jnp.arange(Tg * K, dtype=jnp.int32)[None, :]
+    change = jnp.concatenate(
+        [jnp.ones((G, 1), bool), e_sorted[:, 1:] != e_sorted[:, :-1]], axis=1
+    )
+    first_idx = jax.lax.cummax(jnp.where(change, ar, 0), axis=1)
+    pos = ar - first_idx
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, 0).astype(jnp.int32)
+
+    g_idx = jnp.broadcast_to(jnp.arange(G)[:, None], (G, Tg * K))
+    gathered = jnp.take_along_axis(xt, tok_sorted[..., None], axis=1)
+    buf = jnp.zeros((G, E, cap, D), xt.dtype)
+    buf = buf.at[g_idx, e_sorted, pos_c].add(
+        jnp.where(keep[..., None], gathered, 0).astype(xt.dtype)
+    )
+    meta = (e_sorted, pos_c, keep, g_sorted, tok_sorted, g_idx)
+    return buf, meta
+
+
+def _moe_combine(out_buf, meta, shape, dtype):
+    G, Tg, D = shape
+    e_sorted, pos_c, keep, g_sorted, tok_sorted, g_idx = meta
+    contrib = out_buf[g_idx, e_sorted, pos_c] * jnp.where(keep, g_sorted, 0.0)[
+        ..., None
+    ].astype(dtype)
+    out = jnp.zeros((G, Tg, D), dtype)
+    return out.at[g_idx, tok_sorted].add(contrib)
+
+
+def _moe_experts(cfg, p, buf):
+    """(G, E, cap, D) -> (G, E, cap, D): expert-parallel einsums (GSPMD)."""
+    buf = constrain(buf, ("batch", "experts", "moe_cap", None))
+    act = activation_fn(cfg.activation)
+    h = act(jnp.einsum("gecd,edf->gecf", buf, p["we1"]))
+    if cfg.activation == "swiglu":
+        h = h * jnp.einsum("gecd,edf->gecf", buf, p["we3"])
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["we2"])
+    return constrain(out_buf, ("batch", "experts", "moe_cap", None))
+
+
+def moe_apply(cfg, p, x):
+    """Top-k token-choice MoE with group-local dispatch.
+
+    Tokens split into G groups aligned with the data-parallel shards;
+    dispatch/combine (sorts + batched gathers/scatters) run *inside
+    shard_map over the batch axes* so every index op is shard-local —
+    GSPMD replicates batched scatters with computed indices otherwise
+    (measured: 103 GB/device f32 (G,TgK,D) updates on dbrx prefill_32k,
+    EXPERIMENTS.md §Perf H10b). The expert FFN einsum stays outside under
+    GSPMD (expert-parallel via the experts->model sharding). Per-group
+    capacity = cf*Tg*K/E, Switch-style; overflow dropped.
+    """
+    from repro.distributed import sharding as shd
+
+    B, S, D = x.shape
+    T = B * S
+    G = _largest_divisor_leq(T, MOE_GROUPS)
+    Tg = T // G
+    xt = x.reshape(G, Tg, D)
+    xt = constrain(xt, ("batch", None, "act_embed"))
+
+    ctx = shd._ACT_CTX[-1] if shd._ACT_CTX else None
+    use_shard_map = False
+    if ctx is not None:
+        mesh, rules = ctx
+        baxes = rules.get("batch") or ()
+        baxes = tuple(a for a in ((baxes,) if isinstance(baxes, str) else baxes) if a in mesh.shape)
+        import numpy as _np
+
+        bsize = int(_np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+        use_shard_map = bsize > 1 and G % bsize == 0
+
+    if use_shard_map:
+        from jax.sharding import PartitionSpec as P
+
+        bspec = baxes if len(baxes) > 1 else baxes[0]
+
+        def local_dispatch(xt_l, router):
+            return _moe_dispatch(cfg, router, xt_l)
+
+        buf, meta = jax.shard_map(
+            local_dispatch,
+            mesh=mesh,
+            in_specs=(P(bspec), P()),
+            out_specs=(P(bspec), P(bspec)),
+            check_vma=False,
+        )(xt, p["router"])
+        out_buf = _moe_experts(cfg, p, buf)
+
+        def local_combine(out_buf_l, meta_l):
+            G_l = out_buf_l.shape[0]
+            return _moe_combine(out_buf_l, meta_l, (G_l, Tg, D), xt.dtype)
+
+        out = jax.shard_map(
+            local_combine,
+            mesh=mesh,
+            in_specs=(P(bspec), P(bspec)),
+            out_specs=P(bspec),
+            check_vma=False,
+        )(out_buf, meta)
+    else:
+        buf, meta = _moe_dispatch(cfg, p["router"], xt)
+        out_buf = _moe_experts(cfg, p, buf)
+        out = _moe_combine(out_buf, meta, (G, Tg, D), xt.dtype)
+
+    if cfg.shared_expert:
+        out = out + ffn_apply(cfg, p["shared"], xt)
+    return out.reshape(B, S, D)
+
+
+# --------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma)
+# --------------------------------------------------------------------------
+
+
+def _rglru_gates(p, xc):
+    """(log_a, gx) from the conv output xc (fp32)."""
+    xf = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["wa_diag"].astype(jnp.float32) + p["ba"].astype(jnp.float32))
+    i = jax.nn.sigmoid(xf * p["wi_diag"].astype(jnp.float32) + p["bi"].astype(jnp.float32))
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    return log_a, i * xf
+
+
+def rec_seq(cfg, p, x):
+    """(B, S, D) -> (B, S, D) + cache entry {h, conv}."""
+    B, S, _ = x.shape
+    gate = jax.nn.gelu(x @ p["wgate"])  # (B, S, R)
+    xr = x @ p["wx"]  # (B, S, R)
+    # depthwise temporal conv, causal (left-padded)
+    CW = cfg.conv_width
+    pad = jnp.zeros((B, CW - 1, xr.shape[-1]), xr.dtype)
+    xp = jnp.concatenate([pad, xr], axis=1)
+    xc = sum(
+        xp[:, i : i + S] * p["conv"][i] for i in range(CW)
+    )
+    log_a, gx = _rglru_gates(p, xc)
+    h, h_final = rglru_ops.rglru_scan(log_a, gx, None)
+    out = (gate * h.astype(gate.dtype)) @ p["wo"]
+    cache = {
+        "h": h_final,
+        "conv": xp[:, -(CW - 1):],
+    }
+    return out, cache
+
+
+def rec_decode(cfg, p, x, cache):
+    B = x.shape[0]
+    gate = jax.nn.gelu(x @ p["wgate"])  # (B, 1, R)
+    xr = (x @ p["wx"])[:, 0]  # (B, R)
+    CW = cfg.conv_width
+    hist = jnp.concatenate(
+        [cache["conv"].astype(xr.dtype), xr[:, None]], axis=1
+    )  # (B, CW, R)
+    xc = sum(hist[:, i] * p["conv"][i] for i in range(CW))  # (B, R)
+    log_a, gx = _rglru_gates(p, xc)
+    a = jnp.exp(log_a)
+    h = a * cache["h"] + jnp.sqrt(-jnp.expm1(2.0 * log_a)) * gx
+    out = (gate[:, 0] * h.astype(gate.dtype)) @ p["wo"]
+    return out[:, None], {"h": h, "conv": hist[:, 1:].astype(cache["conv"].dtype)}
+
+
+# --------------------------------------------------------------------------
+# RWKV-6 block
+# --------------------------------------------------------------------------
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros or `last` for t=0)."""
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None].astype(x.dtype)
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _rwkv_mix(p, x, xs):
+    mu = p["mu"]  # (5, D)
+    mix = lambda i: x + (xs - x) * jax.nn.sigmoid(mu[i])  # noqa: E731
+    return mix(0), mix(1), mix(2), mix(3), mix(4)  # r,k,v,g,w inputs
+
+
+def _rwkv_decay(cfg, p, xw):
+    raw = p["w0"].astype(jnp.float32) + jnp.tanh(
+        xw.astype(jnp.float32) @ p["wA"].astype(jnp.float32)
+    ) @ p["wB"].astype(jnp.float32)
+    return jnp.exp(-jnp.exp(raw))  # (.., D) in (0, 1)
+
+
+def _group_norm(x, scale, eps, n_groups):
+    B, S, D = x.shape
+    xg = x.reshape(B, S, n_groups, D // n_groups).astype(jnp.float32)
+    mean = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(B, S, D) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rwkv_time_mix_seq(cfg, p, x, last=None, s0=None):
+    B, S, D = x.shape
+    H, N = cfg.n_heads, cfg.rwkv_head_dim
+    xs = _shift(x, last)
+    xr, xk, xv, xg, xw = _rwkv_mix(p, x, xs)
+    r = (xr @ p["wr"]).reshape(B, S, H, N).transpose(0, 2, 1, 3)
+    k = (xk @ p["wk_"]).reshape(B, S, H, N).transpose(0, 2, 1, 3)
+    v = (xv @ p["wv_"]).reshape(B, S, H, N).transpose(0, 2, 1, 3)
+    g = jax.nn.silu(xg @ p["wg"])
+    w = _rwkv_decay(cfg, p, xw).reshape(B, S, H, N).transpose(0, 2, 1, 3)
+    o, s_final = rwkv_ops.rwkv6_scan(r, k, v, w.astype(jnp.float32), p["u"], s0)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, D)
+    o = _group_norm(o, p["ln_x"], 64e-5, H)
+    return (o * g) @ p["wo"], s_final
+
+
+def rwkv_channel_mix_seq(cfg, p, x, last=None):
+    xs = _shift(x, last)
+    mu = p["mu_c"]
+    xk = x + (xs - x) * jax.nn.sigmoid(mu[0])
+    xr = x + (xs - x) * jax.nn.sigmoid(mu[1])
+    kk = jnp.square(jax.nn.relu(xk @ p["wc1"]))
+    return jax.nn.sigmoid(xr @ p["wcr"]) * (kk @ p["wc2"])
+
+
+# --------------------------------------------------------------------------
+# full block application (norms + residuals + cache threading)
+# --------------------------------------------------------------------------
+
+
+def apply_block_seq(kind, cfg, p, x, positions, img=None, cache=None):
+    """Full-sequence block. Returns (y, new_cache_or_None).
+
+    `cache` is only consulted for recurrent kinds (chunked prefill); the
+    returned entry has the same structure as cache_spec(kind).
+    """
+    if kind in ("dense", "local_attn", "cross", "moe"):
+        xn = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        a, kv = attn_seq(cfg, p["attn"], xn, positions, kind, img)
+        x = x + a
+        xn = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        if kind == "moe":
+            x = x + moe_apply(cfg, p["moe"], xn)
+        else:
+            x = x + ffn_apply(cfg, p["ffn"], xn)
+        new_cache = None
+        if kv is not None:
+            k, v = kv
+            if kind == "local_attn":
+                # Ring-buffer layout: key of position p lives at slot p % w,
+                # so decode's (length % w) overwrite stays consistent.
+                w = cfg.local_window
+                S = k.shape[2]
+                if S > w:
+                    k, v = k[:, :, -w:], v[:, :, -w:]
+                    k = jnp.roll(k, S % w, axis=2)
+                    v = jnp.roll(v, S % w, axis=2)
+            new_cache = {"k": k, "v": v}
+        return x, new_cache
+
+    if kind == "rec":
+        xn = rms_norm(x, p["norm_mix"], cfg.norm_eps)
+        a, rc = rec_seq(cfg, p["rec"], xn)
+        x = x + a
+        xn = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        x = x + ffn_apply(cfg, p["ffn"], xn)
+        return x, rc
+
+    if kind == "rwkv":
+        pr = p["rwkv"]
+        last_t = None if cache is None else cache["shift"]
+        last_c = None if cache is None else cache["shift_c"]
+        s0 = None if cache is None else cache["S"]
+        xn = rms_norm(x, p["norm_mix"], cfg.norm_eps)
+        a, s_final = rwkv_time_mix_seq(cfg, pr, xn, last_t, s0)
+        shift_t = xn[:, -1]
+        x = x + a
+        xn2 = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        x = x + rwkv_channel_mix_seq(cfg, pr, xn2, last_c)
+        new_cache = {
+            "S": s_final,
+            "shift": shift_t,
+            "shift_c": xn2[:, -1],
+        }
+        return x, new_cache
+
+    raise ValueError(kind)
+
+
+def apply_block_decode(kind, cfg, p, x, positions, cache, lengths):
+    """One-token block (x: (B, 1, D)). Returns (y, new_cache)."""
+    if kind in ("dense", "local_attn", "cross", "moe"):
+        xn = rms_norm(x, p["norm_attn"], cfg.norm_eps)
+        a, new_cache = attn_decode(
+            cfg, p["attn"], xn, positions, kind, cache, lengths
+        )
+        x = x + a
+        xn = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        if kind == "moe":
+            x = x + moe_apply(cfg, p["moe"], xn)
+        else:
+            x = x + ffn_apply(cfg, p["ffn"], xn)
+        return x, new_cache
+
+    if kind == "rec":
+        xn = rms_norm(x, p["norm_mix"], cfg.norm_eps)
+        a, new_cache = rec_decode(cfg, p["rec"], xn, cache)
+        x = x + a
+        xn = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        x = x + ffn_apply(cfg, p["ffn"], xn)
+        return x, new_cache
+
+    if kind == "rwkv":
+        pr = p["rwkv"]
+        B = x.shape[0]
+        H, N, D = cfg.n_heads, cfg.rwkv_head_dim, cfg.d_model
+        xn = rms_norm(x, p["norm_mix"], cfg.norm_eps)
+        xs = cache["shift"][:, None].astype(xn.dtype)
+        xr, xk, xv, xg, xw = _rwkv_mix(pr, xn, xs)
+        r = (xr @ pr["wr"]).reshape(B, 1, H, N).transpose(0, 2, 1, 3)
+        k = (xk @ pr["wk_"]).reshape(B, 1, H, N).transpose(0, 2, 1, 3)
+        v = (xv @ pr["wv_"]).reshape(B, 1, H, N).transpose(0, 2, 1, 3)
+        g = jax.nn.silu(xg @ pr["wg"])
+        w = _rwkv_decay(cfg, pr, xw).reshape(B, 1, H, N).transpose(0, 2, 1, 3)
+        o, s_final = rwkv_ops.rwkv6_scan(
+            r, k, v, w.astype(jnp.float32), pr["u"], cache["S"]
+        )
+        o = o.transpose(0, 2, 1, 3).reshape(B, 1, D)
+        o = _group_norm(o, pr["ln_x"], 64e-5, H)
+        a = (o * g) @ pr["wo"]
+        shift_t = xn[:, 0]
+        x = x + a
+        xn2 = rms_norm(x, p["norm_ffn"], cfg.norm_eps)
+        xs_c = cache["shift_c"][:, None].astype(xn2.dtype)
+        mu = pr["mu_c"]
+        xk2 = xn2 + (xs_c - xn2) * jax.nn.sigmoid(mu[0])
+        xr2 = xn2 + (xs_c - xn2) * jax.nn.sigmoid(mu[1])
+        kk = jnp.square(jax.nn.relu(xk2 @ pr["wc1"]))
+        x = x + jax.nn.sigmoid(xr2 @ pr["wcr"]) * (kk @ pr["wc2"])
+        new_cache = {
+            "S": s_final,
+            "shift": shift_t.astype(cache["shift"].dtype),
+            "shift_c": xn2[:, 0].astype(cache["shift_c"].dtype),
+        }
+        return x, new_cache
+
+    raise ValueError(kind)

@@ -1,0 +1,96 @@
+"""Shared layer primitives with logical sharding axes.
+
+Parameters are plain pytrees of jnp arrays; a parallel pytree of logical
+axis tuples (distributed/sharding.py maps them onto the mesh) is built with
+the same structure. ``Param(shape, axes)`` declares both at once.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: Optional[float] = None  # overrides fan-in scale
+
+    def make(self, key, dtype):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        # fan-in = second-to-last dim (skips the stacked-layers leading dim)
+        fan_in = self.shape[-2] if len(self.shape) > 1 else self.shape[-1]
+        scale = self.scale if self.scale is not None else max(fan_in, 1) ** -0.5
+        return (jax.random.normal(key, self.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(specs: Dict[str, Any], key, dtype) -> Dict[str, Any]:
+    """Instantiate a (nested) dict of Param specs into arrays."""
+    flat, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, Param)
+    )
+    keys = jax.random.split(key, len(flat))
+    leaves = [p.make(k, dtype) for p, k in zip(flat, keys)]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def axes_tree(specs: Dict[str, Any]) -> Dict[str, Any]:
+    return jax.tree_util.tree_map(
+        lambda p: p.axes, specs, is_leaf=lambda x: isinstance(x, Param)
+    )
+
+
+def stack_specs(specs: Dict[str, Any], n: int, axis_name: str = "layers"):
+    """Prepend a stacking dimension (scanned superblocks) to every spec."""
+    return jax.tree_util.tree_map(
+        lambda p: Param(
+            (n,) + p.shape, (axis_name,) + p.axes, init=p.init, scale=p.scale
+        ),
+        specs,
+        is_leaf=lambda x: isinstance(x, Param),
+    )
+
+
+# --- numerics ----------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def rope(
+    x: jnp.ndarray,  # (..., S, D_head) or (..., 1, D_head)
+    positions: jnp.ndarray,  # (..., S)
+    theta: float,
+) -> jnp.ndarray:
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-np.arange(0, half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def activation_fn(name: str):
+    if name == "swiglu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(name)

@@ -1,0 +1,317 @@
+"""The unified LM: scanned superblocks over a per-arch layer pattern.
+
+Parameters are stacked along a leading superblock axis and consumed by
+jax.lax.scan, so HLO size (and compile time) is O(1) in depth — essential
+for the 64-layer/104B dry-runs. Heterogeneous patterns (RecurrentGemma's
+rec/rec/local_attn, the VLM's every-5th cross layer) stack each pattern
+position separately inside one scan body; pattern-remainder layers (e.g.
+RecurrentGemma's trailing rec,rec) run unscanned after the scan.
+
+API (all pure functions over a params pytree):
+  init(key)                 -> params
+  logical_axes()            -> pytree of logical axis tuples (sharding)
+  loss(params, batch)       -> scalar  (next-token CE, fp32 logits)
+  init_cache(batch, s_max)  -> decode cache pytree
+  prefill(params, batch, cache) -> (last_logits, cache, lengths)
+  decode_step(params, tok_or_embed, cache, lengths) -> (logits, cache, lens)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+
+from . import blocks
+from .layers import Param, axes_tree, init_params, rms_norm, stack_specs
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+@dataclasses.dataclass
+class LM:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------- params
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        D, V = cfg.d_model, cfg.vocab_size
+        specs: Dict[str, Any] = {}
+        # sigma = D^-0.5 keeps tied-head logits at unit variance (sigma=1
+        # inflated initial CE ~8x on tied-embedding archs).
+        specs["embed"] = Param((V, D), ("vocab", "embed"), scale=D**-0.5)
+        # audio backbone: embeddings also arrive as frontend stubs, but the
+        # token embedding table still exists for target re-embedding.
+        pat = {}
+        for i, kind in enumerate(cfg.pattern):
+            pat[f"pos{i}_{kind}"] = stack_specs(
+                blocks.block_specs(kind, cfg), cfg.n_superblocks
+            )
+        specs["blocks"] = pat
+        for j, kind in enumerate(cfg.remainder):
+            specs[f"rem{j}_{kind}"] = blocks.block_specs(kind, cfg)
+        specs["final_norm"] = Param((D,), ("embed",), init="zeros")
+        if not cfg.tie_embeddings:
+            specs["head"] = Param((D, V), ("embed", "vocab"))
+        return specs
+
+    def init(self, key, dtype: Optional[Any] = None):
+        dtype = dtype or jnp.bfloat16
+        return init_params(self.param_specs(), key, dtype)
+
+    def logical_axes(self):
+        return axes_tree(self.param_specs())
+
+    # ------------------------------------------------------------- forward
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        if cfg.embed_inputs:
+            return batch["embeds"]  # (B, S, D) frontend stub
+        return params["embed"][batch["tokens"]]
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        head = params["embed"].T if cfg.tie_embeddings else params["head"]
+        return (x @ head).astype(jnp.float32)
+
+    def hidden_states(self, params, batch, remat: bool = False):
+        """(B, S) tokens (+optional embeds/images) -> (B, S, D) final norm."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        img = batch.get("images")  # (B, n_img, D) patch-embedding stub
+
+        pattern = cfg.pattern
+
+        x = constrain(x, ("batch", "act_seq", "act_embed"))
+
+        def body(carry, layer_p):
+            h = carry
+            for i, kind in enumerate(pattern):
+                h, _ = blocks.apply_block_seq(
+                    kind, cfg, layer_p[f"pos{i}_{kind}"], h, positions, img
+                )
+            h = constrain(h, ("batch", "act_seq", "act_embed"))
+            return h, None
+
+        if remat:
+            # Save-nothing: recompute each layer in backward. The
+            # "dots_with_no_batch_dims" policy saves every activation matmul
+            # here (in a layer scan those dots carry no XLA batch dims),
+            # costing 15 GB/device at qwen3-0.6b/train_4k; save-nothing
+            # drops the step to the stacked bf16 carries + one layer's
+            # recompute working set (EXPERIMENTS.md §Perf iteration 1).
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        for j, kind in enumerate(cfg.remainder):
+            x, _ = blocks.apply_block_seq(
+                kind, cfg, params[f"rem{j}_{kind}"], x, positions, img
+            )
+        return rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def forward(self, params, batch, remat: bool = False):
+        """(B, S) tokens (+optional embeds/images) -> (B, S, V) logits."""
+        x = self.hidden_states(params, batch, remat=remat)
+        logits = self._logits(params, x)
+        return constrain(logits, ("batch", None, "vocab"))
+
+    LOSS_CHUNK = 2048  # sequence chunk for the CE block (memory bound)
+
+    def loss(self, params, batch, remat: bool = False):
+        """Mean next-token cross-entropy (fp32 log-softmax).
+
+        The CE block is chunked over the sequence and rematerialised: full
+        (B, S, V) fp32 logits were the single largest train-step buffer
+        (~7.5 GB/device on qwen3-0.6b/train_4k before chunking — see
+        EXPERIMENTS.md §Perf iteration 2).
+        """
+        h = self.hidden_states(params, batch, remat=remat)  # (B, S, D)
+        targets = batch["targets"] if "targets" in batch else batch["tokens"]
+        B, S, D = h.shape
+        # next-token shift with the final position masked out
+        tgt_next = jnp.concatenate([targets[:, 1:], targets[:, :1]], axis=1)
+        # NOTE: must be materialised at (B, S) — a broadcastable (1, S) mask
+        # makes count = S-1 instead of B*(S-1), inflating loss/grads by B.
+        pos_mask = jnp.broadcast_to((jnp.arange(S) < S - 1)[None, :], (B, S))
+        mask = batch.get("mask")
+        if mask is not None:
+            pos_mask = jnp.logical_and(pos_mask, mask.astype(bool))
+        V = self.cfg.vocab_size
+
+        def ce_chunk(h_c, tgt_c, m_c):
+            logits = self._logits(params, h_c)  # (B, C, V) fp32
+            logits = constrain(logits, ("batch", None, "vocab"))
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            # One-hot contraction instead of take_along_axis: stays sharded
+            # on the model-parallel vocab axis (a gather would all-gather).
+            onehot = jax.nn.one_hot(tgt_c, V, dtype=logits.dtype)
+            gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+            m = m_c.astype(jnp.float32)
+            return ((logz - gold) * m).sum(), m.sum()
+
+        chunk = min(self.LOSS_CHUNK, S)
+        if S % chunk:
+            chunk = S
+        if chunk == S:
+            total, count = ce_chunk(h, tgt_next, pos_mask)
+        else:
+            nc = S // chunk
+            xs = (
+                jnp.moveaxis(h.reshape(B, nc, chunk, D), 1, 0),
+                jnp.moveaxis(tgt_next.reshape(B, nc, chunk), 1, 0),
+                jnp.moveaxis(
+                    jnp.broadcast_to(pos_mask, (B, S)).reshape(B, nc, chunk), 1, 0
+                ),
+            )
+            ce = jax.checkpoint(
+                ce_chunk, policy=jax.checkpoint_policies.nothing_saveable
+            )
+
+            def step(carry, xs_c):
+                t, c = ce(*xs_c)
+                return (carry[0] + t, carry[1] + c), None
+
+            (total, count), _ = jax.lax.scan(step, (0.0, 0.0), xs)
+        return total / jnp.maximum(count, 1.0)
+
+    # ------------------------------------------------------------- decode
+
+    def init_cache(self, batch: int, s_max: int, dtype: Optional[Any] = None):
+        """Decode cache. `dtype` overrides the bf16 defaults of float
+        entries (tests use fp32 for exact prefill->decode equivalence)."""
+        cfg = self.cfg
+
+        def _dt(dt):
+            if dtype is not None and dt == jnp.bfloat16:
+                return dtype
+            return dt
+
+        cache: Dict[str, Any] = {"blocks": {}}
+        for i, kind in enumerate(cfg.pattern):
+            spec = blocks.cache_spec(kind, cfg, batch, s_max)
+            cache["blocks"][f"pos{i}_{kind}"] = {
+                k: jnp.zeros((cfg.n_superblocks,) + shape, _dt(dt))
+                for k, (shape, dt) in spec.items()
+            }
+        for j, kind in enumerate(cfg.remainder):
+            spec = blocks.cache_spec(kind, cfg, batch, s_max)
+            cache[f"rem{j}_{kind}"] = {
+                k: jnp.zeros(shape, _dt(dt)) for k, (shape, dt) in spec.items()
+            }
+        return cache
+
+    def cache_spec_tree(self, batch: int, s_max: int):
+        """ShapeDtypeStructs matching init_cache (for dry-run lowering).
+
+        Built without allocation: shapes come from blocks.cache_spec.
+        """
+        cfg = self.cfg
+        cache: Dict[str, Any] = {"blocks": {}}
+        for i, kind in enumerate(cfg.pattern):
+            spec = blocks.cache_spec(kind, cfg, batch, s_max)
+            cache["blocks"][f"pos{i}_{kind}"] = {
+                k: jax.ShapeDtypeStruct((cfg.n_superblocks,) + shape, dt)
+                for k, (shape, dt) in spec.items()
+            }
+        for j, kind in enumerate(cfg.remainder):
+            spec = blocks.cache_spec(kind, cfg, batch, s_max)
+            cache[f"rem{j}_{kind}"] = {
+                k: jax.ShapeDtypeStruct(shape, dt) for k, (shape, dt) in spec.items()
+            }
+        return cache
+
+    def decode_step(self, params, batch, cache, lengths):
+        """One new token for every sequence in the batch.
+
+        batch: {"tokens": (B, 1)} or {"embeds": (B, 1, D)}.
+        Returns (logits (B, V), new_cache, new_lengths).
+        """
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B = x.shape[0]
+        positions = lengths[:, None]  # (B, 1)
+        x = constrain(x, ("batch", "act_seq", "act_embed"))
+
+        pattern = cfg.pattern
+
+        def body(carry, xs):
+            h = carry
+            layer_p, layer_c = xs
+            new_c = {}
+            for i, kind in enumerate(pattern):
+                key = f"pos{i}_{kind}"
+                h, nc = blocks.apply_block_decode(
+                    kind, cfg, layer_p[key], h, positions, layer_c[key], lengths
+                )
+                new_c[key] = nc
+            h = constrain(h, ("batch", "act_seq", "act_embed"))
+            return h, new_c
+
+        x, new_block_cache = jax.lax.scan(
+            body, x, (params["blocks"], cache["blocks"])
+        )
+        new_cache = {"blocks": new_block_cache}
+        for j, kind in enumerate(cfg.remainder):
+            key = f"rem{j}_{kind}"
+            x, nc = blocks.apply_block_decode(
+                kind, cfg, params[key], x, positions, cache[key], lengths
+            )
+            new_cache[key] = nc
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)[:, 0]
+        return logits, new_cache, lengths + 1
+
+    def prefill(self, params, batch, s_max: int, cache_dtype: Optional[Any] = None):
+        """Run the prompt through the model, building a decode cache."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        B, S = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        img = batch.get("images")
+
+        cache = self.init_cache(B, s_max, dtype=cache_dtype)
+        pattern = cfg.pattern
+
+        def body(carry, layer_p):
+            h = carry
+            ys = {}
+            for i, kind in enumerate(pattern):
+                key = f"pos{i}_{kind}"
+                h, nc = blocks.apply_block_seq(
+                    kind, cfg, layer_p[key], h, positions, img
+                )
+                ys[key] = nc
+            return h, ys
+
+        x, block_caches = jax.lax.scan(body, x, params["blocks"])
+        cache["blocks"] = jax.tree_util.tree_map(
+            lambda buf, got: _place(buf, got), cache["blocks"], block_caches
+        )
+        for j, kind in enumerate(cfg.remainder):
+            key = f"rem{j}_{kind}"
+            x, nc = blocks.apply_block_seq(kind, cfg, params[key], x, positions, img)
+            cache[key] = jax.tree_util.tree_map(_place, cache[key], nc)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self._logits(params, x)[:, -1]
+        lengths = jnp.full((B,), S, jnp.int32)
+        return logits, cache, lengths
+
+
+def _place(buf: jnp.ndarray, got: jnp.ndarray) -> jnp.ndarray:
+    """Write a prefill cache entry into the preallocated decode buffer."""
+    if buf.shape == got.shape:
+        return got.astype(buf.dtype)
+    # K/V case: (.., KVH, S, Dh) into (.., KVH, S_max, Dh) at offset 0.
+    idx = tuple(0 for _ in buf.shape)
+    return jax.lax.dynamic_update_slice(buf, got.astype(buf.dtype), idx)

@@ -1,0 +1,2 @@
+from .adamw import AdamW, AdamWConfig, TrainState  # noqa: F401
+from .schedule import cosine_schedule  # noqa: F401

@@ -1,0 +1,91 @@
+"""AdamW with decoupled weight decay, fp32 optimizer state, global-norm
+gradient clipping. State sharding (ZeRO-1) is applied by the train-step
+builder via out_shardings — the optimizer itself is sharding-agnostic."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.params, self.mu, self.nu, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+class AdamW:
+    def __init__(self, cfg: AdamWConfig, schedule: Optional[Callable] = None):
+        self.cfg = cfg
+        self.schedule = schedule or (lambda step: cfg.lr)
+
+    def init(self, params) -> TrainState:
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return TrainState(
+            params=params,
+            mu=jax.tree_util.tree_map(zeros32, params),
+            nu=jax.tree_util.tree_map(zeros32, params),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+    def global_norm(self, grads) -> jnp.ndarray:
+        return jnp.sqrt(
+            sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree_util.tree_leaves(grads)
+            )
+        )
+
+    def apply(self, state: TrainState, grads) -> TrainState:
+        cfg = self.cfg
+        step = state.step + 1
+        lr = self.schedule(step)
+
+        gnorm = self.global_norm(grads)
+        if cfg.grad_clip_norm is not None:
+            scale = jnp.minimum(1.0, cfg.grad_clip_norm / (gnorm + 1e-9))
+        else:
+            scale = 1.0
+
+        b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, mu, nu):
+            g = g.astype(jnp.float32) * scale
+            mu = cfg.b1 * mu + (1 - cfg.b1) * g
+            nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+            mhat = mu / b1c
+            nhat = nu / b2c
+            delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+            decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+            newp = p.astype(jnp.float32) - lr * (delta + decay)
+            return newp.astype(p.dtype), mu, nu
+
+        out = jax.tree_util.tree_map(upd, state.params, grads, state.mu, state.nu)
+        params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+        return TrainState(params=params, mu=mu, nu=nu, step=step)

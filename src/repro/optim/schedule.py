@@ -1,0 +1,22 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(
+    base_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    min_ratio: float = 0.1,
+):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup_steps)
+        frac = (s - warmup_steps) / jnp.maximum(1.0, total_steps - warmup_steps)
+        frac = jnp.clip(frac, 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return base_lr * jnp.where(s < warmup_steps, warm, cos)
+
+    return fn

@@ -1,0 +1,6 @@
+from .steps import (  # noqa: F401
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    train_state_shardings,
+)

@@ -1,0 +1,101 @@
+"""Data-parallel training with int8 error-feedback gradient compression.
+
+The standard pjit train step lets GSPMD insert fp32 gradient reductions.
+For bandwidth-bound DP (e.g. the cross-pod axis, where ICI is the slowest
+link), this step computes per-replica gradients inside shard_map over the
+data axes and synchronises them with `compressed_psum`: int8 payloads
+(4x fewer bytes than fp32, 2x fewer than bf16) with per-tensor scales and
+error feedback carried in the train state (convergence-preserving;
+Karimireddy et al. 2019).
+
+Scope: DP-only sharding (params replicated inside the shard_map region) —
+the cross-pod synchronisation pattern. Composing compression with intra-pod
+FSDP gathers is future work; EXPERIMENTS.md records the measured byte
+reduction and the convergence parity test (tests/test_compressed_dp.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import LM
+from repro.optim import AdamW, TrainState
+from repro.optim import compression
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class CompressedTrainState:
+    inner: TrainState
+    error: Any  # error-feedback residuals, same tree as params (fp32)
+
+    def tree_flatten(self):
+        return (self.inner, self.error), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def build_compressed_dp_train_step(lm: LM, optimizer: AdamW, mesh, *, remat=False):
+    """Returns (step_fn, init_fn) for DP training with int8 grad sync."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    assert data_axes, "mesh needs a data axis"
+    axis_name = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def init_fn(params) -> CompressedTrainState:
+        return CompressedTrainState(
+            inner=optimizer.init(params),
+            error=compression.init_error(params),
+        )
+
+    def local_step(state: CompressedTrainState, batch):
+        # Inside shard_map: batch is the local shard; params replicated.
+        def loss_fn(p):
+            return lm.loss(p, batch, remat=remat)
+
+        loss, grads = jax.value_and_grad(loss_fn)(state.inner.params)
+
+        def sync(g, err):
+            for ax in data_axes:
+                g, err = compression.compressed_psum(g, err, ax)
+            return g, err
+
+        synced = jax.tree_util.tree_map(
+            lambda g, e: sync(g.astype(jnp.float32), e), grads, state.error
+        )
+        grads_s = jax.tree_util.tree_map(
+            lambda t: t[0], synced, is_leaf=lambda t: isinstance(t, tuple)
+        )
+        error = jax.tree_util.tree_map(
+            lambda t: t[1], synced, is_leaf=lambda t: isinstance(t, tuple)
+        )
+        new_inner = optimizer.apply(state.inner, grads_s)
+        loss = jax.lax.pmean(loss, data_axes[0])
+        if len(data_axes) > 1:
+            loss = jax.lax.pmean(loss, data_axes[1])
+        return CompressedTrainState(new_inner, error), loss
+
+    bspec = P(axis_name)
+    state_spec = P()  # replicated params/opt-state (pure DP)
+
+    step = jax.jit(
+        jax.shard_map(
+            local_step,
+            mesh=mesh,
+            in_specs=(state_spec, {"tokens": bspec}),
+            out_specs=(state_spec, P()),
+            check_vma=False,
+        ),
+        donate_argnums=(0,),
+    )
+
+    def place(state):
+        return jax.device_put(state, NamedSharding(mesh, P()))
+
+    return step, init_fn, place

@@ -1,0 +1,141 @@
+"""Pipeline parallelism over the pod axis (GPipe schedule).
+
+The multi-pod mesh's "pod" axis defaults to data parallelism; this module
+provides the alternative: layers are partitioned across pods (the stacked
+superblock axis shards over "pod") and microbatches stream through the
+stages with jax.lax.ppermute inside shard_map. Cross-pod links are the
+slowest in the fabric, and PP sends only activations (B_mb x S x D per
+boundary) instead of DP's full gradient reduction — the classic trade
+(Megatron-LM): PP wins when params/chip >> activations/microbatch.
+
+GPipe schedule, S stages x M microbatches: step t in [0, M+S-1) has stage
+s compute microbatch (t - s) when 0 <= t - s < M. Backward is jax.grad
+through the schedule (ppermute transposes to the reverse permute, giving
+the mirrored backward pipeline automatically).
+
+Scope: the stage-internal computation runs replicated within the pod here
+(PP x DP/TP composition inside one shard_map region is left to GSPMD in
+the main path); the parity test (tests/test_pipeline.py) checks PP loss ==
+serial loss exactly.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import LM, blocks
+from repro.models.layers import rms_norm
+
+
+def _apply_stage(lm: LM, stage_params, x, positions, img=None):
+    """Run this stage's scanned superblocks over x."""
+    cfg = lm.cfg
+
+    def body(carry, layer_p):
+        h = carry
+        for i, kind in enumerate(cfg.pattern):
+            h, _ = blocks.apply_block_seq(
+                kind, cfg, layer_p[f"pos{i}_{kind}"], h, positions, img
+            )
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, stage_params)
+    return x
+
+
+def build_pp_loss(lm: LM, mesh, *, n_microbatches: int, axis: str = "pod"):
+    """Returns pp_loss(params, batch) -> scalar, jitted over `mesh`.
+
+    `params["blocks"]` must have its stacked layer axis divisible by the
+    pipeline axis size; stage s owns slice [s*L/S, (s+1)*L/S).
+    """
+    cfg = lm.cfg
+    n_stages = mesh.shape[axis]
+    assert cfg.n_superblocks % n_stages == 0
+    assert not cfg.remainder, "remainder layers unsupported under PP"
+    M = n_microbatches
+
+    def local_loss(params, batch):
+        stage = jax.lax.axis_index(axis)
+        tokens = batch["tokens"]  # (B, S) replicated within the stage
+        B, S = tokens.shape
+        assert B % M == 0
+        mb = B // M
+        positions = jnp.broadcast_to(jnp.arange(S), (mb, S))
+        fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        is_first = stage == 0
+        is_last = stage == n_stages - 1
+
+        def embed(i):
+            toks = jax.lax.dynamic_slice_in_dim(tokens, i * mb, mb, 0)
+            return params["embed"][toks]
+
+        def head_loss(x, i):
+            toks = jax.lax.dynamic_slice_in_dim(tokens, i * mb, mb, 0)
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            h = params["embed"].T if cfg.tie_embeddings else params["head"]
+            logits = (x @ h).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits[:, :-1], axis=-1)
+            onehot = jax.nn.one_hot(
+                toks[:, 1:], cfg.vocab_size, dtype=logits.dtype
+            )
+            gold = jnp.einsum("bsv,bsv->bs", logits[:, :-1], onehot)
+            return (logz - gold).sum(), float(mb * (S - 1))
+
+        # GPipe: carry the inter-stage activation through the schedule.
+        total = jnp.zeros((), jnp.float32)
+        count = jnp.zeros((), jnp.float32)
+        buf = jnp.zeros((mb, S, cfg.d_model), params["final_norm"].dtype)
+
+        for t in range(M + n_stages - 1):
+            # stage s works on microbatch (t - s) when 0 <= t-s < M;
+            # outside that window it computes on garbage that is masked out
+            # below (the GPipe bubble, computed-but-unused here).
+            mb_idx = jnp.clip(jnp.asarray(t) - stage, 0, M - 1)
+            x_in = jnp.where(is_first, embed(mb_idx), buf)
+            y = _apply_stage(lm, params["blocks"], x_in, positions)
+            active_mask = jnp.logical_and(stage <= t, t - stage <= M - 1)
+            # last stage: accumulate loss for its active microbatch
+            l, c = head_loss(y, mb_idx)
+            take = jnp.logical_and(active_mask, is_last)
+            total = total + jnp.where(take, l, 0.0)
+            count = count + jnp.where(take, c, 0.0)
+            # send activations downstream (ring; the wraparound value is
+            # never consumed because stage 0 always embeds)
+            buf = jax.lax.ppermute(y, axis, fwd_perm)
+
+        # every stage holds the same (total, count) only on the last stage;
+        # broadcast with a psum over the pipeline axis
+        total = jax.lax.psum(jnp.where(is_last, total, 0.0), axis)
+        count = jax.lax.psum(jnp.where(is_last, count, 0.0), axis)
+        return total / jnp.maximum(count, 1.0)
+
+    # Stage-sharded params: only the stacked blocks split over the axis.
+    def blocks_spec(tree):
+        return jax.tree_util.tree_map(lambda _: P(axis), tree)
+
+    def params_spec(params):
+        return {
+            k: (blocks_spec(v) if k == "blocks" else jax.tree_util.tree_map(
+                lambda _: P(), v) if isinstance(v, dict) else P())
+            for k, v in params.items()
+        }
+
+    def make(params_tree):
+        in_specs = (params_spec(params_tree), {"tokens": P()})
+        return jax.jit(
+            jax.shard_map(
+                local_loss,
+                mesh=mesh,
+                in_specs=in_specs,
+                out_specs=P(),
+                check_vma=False,
+            )
+        )
+
+    return make

@@ -1,0 +1,11 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
+must see the real single-device CPU; multi-device dry-run tests spawn
+subprocesses with xla_force_host_platform_device_count set explicitly."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

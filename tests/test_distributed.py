@@ -1,0 +1,214 @@
+"""Distribution tests: sharding rules, elastic mesh, failure injection in
+the scheduler, small-mesh dry-run lowering (subprocess; the main test
+process keeps 1 device)."""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import latency, simulator, topology, workload
+from repro.core.policy import PolicyParams
+
+
+# ---------------------------------------------------------------- rules
+
+
+def test_spec_for_divisibility_fallback():
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh(
+        (1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    # 40 heads % 1 == 0 -> sharded onto a 1-sized axis is trivially fine.
+    spec = shd.spec_for(("embed", "heads"), (64, 40), mesh, {"embed": None, "heads": ("model",)})
+    assert spec == P(None, "model")
+
+
+def test_spec_for_no_axis_reuse():
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh(
+        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
+    )
+    rules = {"a": ("model",), "b": ("model",)}
+    spec = shd.spec_for(("a", "b"), (4, 4), mesh, rules)
+    # model axis must not be used twice
+    assert spec == P("model", None) or spec == P("model")
+
+
+def test_constrain_noop_without_ctx():
+    import jax.numpy as jnp
+
+    from repro.distributed.sharding import constrain
+
+    x = jnp.ones((4, 4))
+    y = constrain(x, ("batch", None))
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------- elastic
+
+
+def test_elastic_mesh_shrinks_data_axis():
+    from repro.distributed.elastic import elastic_mesh
+
+    mesh = elastic_mesh(1, model_parallelism=1)
+    assert dict(mesh.shape) == {"data": 1, "model": 1}
+    with pytest.raises(ValueError):
+        elastic_mesh(0, model_parallelism=1)
+
+
+# ---------------------------------------------------------------- failures
+
+
+def test_failure_requeues_and_recovers():
+    topo = topology.Topology(
+        n_machines=48, machines_per_rack=8, racks_per_pod=3, slots_per_machine=4
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=160, seed=0)
+    jobs = [
+        workload.ml_job(i, "qwen3-1.7b", "train", n_hosts=4, duration_s=140,
+                        arrival_s=float(i))
+        for i in range(4)
+    ]
+    wl = workload.Workload(jobs=jobs, duration_s=160, topo=topo)
+    cfg = simulator.SimConfig(
+        policy="nomora",
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+        failures=((50, 0), (50, 1)),
+        migration_interval_s=20,
+        seed=1,
+    )
+    sim = simulator.Simulator(wl, plane, cfg)
+    sim.run()
+    assert sim.dead == {0, 1}
+    assert sim.free_slots[0] == 0 and sim.free_slots[1] == 0
+    for rec in sim.jobs.values():
+        for task in rec.tasks:
+            if task.machine >= 0:
+                assert task.machine not in sim.dead
+
+
+def test_straggler_migration_rounds_trigger():
+    topo = topology.Topology(
+        n_machines=48, machines_per_rack=8, racks_per_pod=2, slots_per_machine=4
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=120, seed=2)
+    wl = workload.synth_workload(topo, duration_s=120, seed=3, target_utilisation=0.4)
+    cfg = simulator.SimConfig(
+        policy="nomora",
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+        straggler_threshold=0.99,  # aggressive: most jobs flagged
+        perf_sample_interval_s=10,
+        migration_interval_s=1000,  # only straggler rounds migrate
+        seed=4,
+    )
+    sim = simulator.Simulator(wl, plane, cfg)
+    m = sim.run()
+    assert m.tasks_migrated >= 0  # runs without error; migrations possible
+
+
+# ---------------------------------------------------------------- dry-run
+
+_MOE_PARITY_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses, json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro import configs
+from repro.models import LM
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_mesh
+
+cfg = configs.get_config("dbrx-132b")
+cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          head_dim=16, d_ff=96, vocab_size=512, n_experts=4,
+                          experts_per_token=2, moe_capacity_factor=4.0)
+lm = LM(cfg)
+params = lm.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, 512, (8, 32)))}
+
+# pure path (no activation ctx)
+pure = lm.forward(params, batch)
+
+# shard_map path under the mesh ctx
+mesh = make_mesh((4, 2), ("data", "model"))
+rules = shd.train_rules(False)
+def fwd(p, b):
+    with shd.activation_ctx(mesh, rules):
+        return lm.forward(p, b)
+sharded = jax.jit(fwd)(params, batch)
+err = float(jnp.abs(pure - sharded).max())
+print(json.dumps({"max_err": err}))
+"""
+
+
+def test_moe_shard_map_matches_pure_subprocess():
+    """The shard_map group-local MoE dispatch must agree with the pure
+    single-device path (dropless capacity so no routing nondeterminism)."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _MOE_PARITY_SNIPPET],
+        capture_output=True,
+        text=True,
+        timeout=480,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert out["max_err"] < 2e-4, out
+
+
+_DRYRUN_SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+from repro import configs
+from repro.configs.base import ShapeSpec
+from repro.launch import dryrun
+from repro.launch.mesh import make_mesh
+import dataclasses
+
+cfg = configs.get_config("qwen3-0.6b")
+cfg = dataclasses.replace(cfg, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                          head_dim=16, d_ff=128, vocab_size=512)
+mesh = make_mesh((2, 4), ("data", "model"))
+out = {}
+for shape in (ShapeSpec("t", "train", 64, 8), ShapeSpec("d", "decode", 64, 8),
+              ShapeSpec("p", "prefill", 64, 8)):
+    rec = dryrun.lower_cell(cfg, shape, mesh, multi_pod=False)
+    out[shape.kind] = {"flops": rec["flops_dev"], "colls": rec["collectives"]["count"]}
+print(json.dumps(out))
+"""
+
+
+def test_small_mesh_dryrun_subprocess():
+    """Lower train/decode/prefill on an 8-device host mesh in a subprocess
+    (keeps this process single-device)."""
+    proc = subprocess.run(
+        [sys.executable, "-c", _DRYRUN_SNIPPET],
+        capture_output=True,
+        text=True,
+        timeout=480,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd="/root/repo",
+    )
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    out = json.loads(proc.stdout.strip().splitlines()[-1])
+    assert set(out) == {"train", "decode", "prefill"}
+    for v in out.values():
+        assert v["flops"] > 0
+    # distribution is real: collectives present in the partitioned programs
+    assert out["train"]["colls"] > 0

@@ -1,0 +1,86 @@
+"""Flash/decode attention kernel sweeps vs pure-jnp oracles (interpret)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import kernel as dec_kernel
+from repro.kernels.decode_attention import ref as dec_ref
+from repro.kernels.flash_attention import kernel as fa_kernel
+from repro.kernels.flash_attention import ref as fa_ref
+
+
+def _qkv(rng, B, H, KVH, S, D, dtype):
+    q = rng.normal(0, 1, (B, H, S, D)).astype(dtype)
+    k = rng.normal(0, 1, (B, KVH, S, D)).astype(dtype)
+    v = rng.normal(0, 1, (B, KVH, S, D)).astype(dtype)
+    return jnp.asarray(q), jnp.asarray(k), jnp.asarray(v)
+
+
+@pytest.mark.parametrize(
+    "B,H,KVH,S,D,dtype",
+    [
+        (1, 2, 2, 128, 64, np.float32),
+        (2, 4, 2, 256, 64, np.float32),
+        (1, 8, 1, 128, 128, np.float32),  # MQA
+        (2, 4, 4, 128, 64, np.float16),
+    ],
+)
+def test_flash_attention_causal(B, H, KVH, S, D, dtype):
+    rng = np.random.default_rng(B * 100 + S)
+    q, k, v = _qkv(rng, B, H, KVH, S, D, dtype)
+    got = fa_kernel.flash_attention_pallas(
+        q, k, v, causal=True, block_q=64, block_k=64, interpret=True
+    )
+    want = fa_ref.attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == np.float16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(7)
+    q, k, v = _qkv(rng, 1, 2, 2, 128, 64, np.float32)
+    got = fa_kernel.flash_attention_pallas(
+        q, k, v, causal=False, block_q=64, block_k=64, interpret=True
+    )
+    want = fa_ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_block_invariance():
+    rng = np.random.default_rng(8)
+    q, k, v = _qkv(rng, 1, 2, 1, 256, 64, np.float32)
+    a = fa_kernel.flash_attention_pallas(q, k, v, block_q=64, block_k=128, interpret=True)
+    b = fa_kernel.flash_attention_pallas(q, k, v, block_q=256, block_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize(
+    "B,H,KVH,S,D",
+    [(1, 2, 2, 128, 64), (3, 8, 2, 256, 64), (2, 4, 1, 512, 128)],
+)
+def test_decode_attention(B, H, KVH, S, D):
+    rng = np.random.default_rng(B * 17 + S)
+    q = jnp.asarray(rng.normal(0, 1, (B, H, D)).astype(np.float32))
+    kc = jnp.asarray(rng.normal(0, 1, (B, KVH, S, D)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(0, 1, (B, KVH, S, D)).astype(np.float32))
+    lengths = jnp.asarray(rng.integers(1, S + 1, size=B), jnp.int32)
+    got = dec_kernel.decode_attention_pallas(
+        q, kc, vc, lengths, block_k=64, interpret=True
+    )
+    want = dec_ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_full_and_single_lengths():
+    rng = np.random.default_rng(3)
+    B, H, KVH, S, D = 2, 4, 2, 128, 64
+    q = jnp.asarray(rng.normal(0, 1, (B, H, D)).astype(np.float32))
+    kc = jnp.asarray(rng.normal(0, 1, (B, KVH, S, D)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(0, 1, (B, KVH, S, D)).astype(np.float32))
+    lengths = jnp.asarray([1, S], jnp.int32)
+    got = dec_kernel.decode_attention_pallas(q, kc, vc, lengths, block_k=64, interpret=True)
+    want = dec_ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,83 @@
+"""RWKV-6 and RG-LRU recurrence kernel sweeps vs pure-jnp oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rglru_scan import kernel as rg_kernel
+from repro.kernels.rglru_scan import ref as rg_ref
+from repro.kernels.rwkv6_scan import kernel as rk_kernel
+from repro.kernels.rwkv6_scan import ref as rk_ref
+
+
+@pytest.mark.parametrize(
+    "B,H,T,N,bt",
+    [(1, 1, 16, 16, 8), (2, 3, 64, 32, 32), (1, 2, 128, 64, 64)],
+)
+def test_rwkv6_scan_matches_ref(B, H, T, N, bt):
+    rng = np.random.default_rng(B * 7 + T)
+    r = jnp.asarray(rng.normal(0, 1, (B, H, T, N)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (B, H, T, N)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (B, H, T, N)).astype(np.float32))
+    # decays in (0,1) as exp(-exp(x)) produces
+    w = jnp.asarray(rng.uniform(0.2, 0.999, (B, H, T, N)).astype(np.float32))
+    u = jnp.asarray(rng.normal(0, 0.5, (H, N)).astype(np.float32))
+    s0 = jnp.asarray(rng.normal(0, 0.1, (B, H, N, N)).astype(np.float32))
+
+    got_o, got_s = rk_kernel.rwkv6_scan_pallas(r, k, v, w, u, s0, block_t=bt, interpret=True)
+    want_o, want_s = rk_ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s), atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv6_zero_state_default():
+    rng = np.random.default_rng(0)
+    B, H, T, N = 1, 2, 32, 16
+    r, k, v = (jnp.asarray(rng.normal(0, 1, (B, H, T, N)).astype(np.float32)) for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (B, H, T, N)).astype(np.float32))
+    u = jnp.asarray(rng.normal(0, 0.5, (H, N)).astype(np.float32))
+    got_o, _ = rk_kernel.rwkv6_scan_pallas(r, k, v, w, u, None, block_t=16, interpret=True)
+    want_o, _ = rk_ref.rwkv6_scan_ref(r, k, v, w, u, None)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o), atol=1e-4, rtol=1e-4)
+
+
+def test_rwkv6_chunked_equals_full():
+    """Chaining the final state across two half-sequences == one full scan."""
+    rng = np.random.default_rng(5)
+    B, H, T, N = 1, 1, 64, 16
+    r, k, v = (jnp.asarray(rng.normal(0, 1, (B, H, T, N)).astype(np.float32)) for _ in range(3))
+    w = jnp.asarray(rng.uniform(0.5, 0.99, (B, H, T, N)).astype(np.float32))
+    u = jnp.asarray(rng.normal(0, 0.5, (H, N)).astype(np.float32))
+    o_full, s_full = rk_ref.rwkv6_scan_ref(r, k, v, w, u, None)
+    h = T // 2
+    o1, s1 = rk_ref.rwkv6_scan_ref(r[:, :, :h], k[:, :, :h], v[:, :, :h], w[:, :, :h], u, None)
+    o2, s2 = rk_ref.rwkv6_scan_ref(r[:, :, h:], k[:, :, h:], v[:, :, h:], w[:, :, h:], u, s1)
+    np.testing.assert_allclose(np.asarray(o_full[:, :, h:]), np.asarray(o2), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_full), np.asarray(s2), atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize(
+    "B,T,D,bt,bd",
+    [(1, 16, 128, 8, 128), (2, 64, 256, 32, 128), (1, 128, 512, 64, 512)],
+)
+def test_rglru_scan_matches_ref(B, T, D, bt, bd):
+    rng = np.random.default_rng(B * 11 + T)
+    log_a = jnp.asarray(-rng.uniform(0.001, 2.0, (B, T, D)).astype(np.float32))
+    gx = jnp.asarray(rng.normal(0, 1, (B, T, D)).astype(np.float32))
+    h0 = jnp.asarray(rng.normal(0, 0.3, (B, D)).astype(np.float32))
+    got_o, got_h = rg_kernel.rglru_scan_pallas(
+        log_a, gx, h0, block_t=bt, block_d=bd, interpret=True
+    )
+    want_o, want_h = rg_ref.rglru_scan_ref(log_a, gx, h0)
+    np.testing.assert_allclose(np.asarray(got_o), np.asarray(want_o), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_h), np.asarray(want_h), atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_stability_near_one():
+    """a -> 1 (log_a -> 0^-): sqrt(-expm1) path must stay finite."""
+    B, T, D = 1, 8, 128
+    log_a = jnp.full((B, T, D), -1e-7, jnp.float32)
+    gx = jnp.ones((B, T, D), jnp.float32)
+    got_o, got_h = rg_kernel.rglru_scan_pallas(log_a, gx, None, block_t=8, block_d=128, interpret=True)
+    assert np.isfinite(np.asarray(got_o)).all()
+    assert np.isfinite(np.asarray(got_h)).all()

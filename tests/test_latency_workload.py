@@ -1,0 +1,99 @@
+"""Latency plane + workload synthesis tests (paper §6 recipes)."""
+
+import numpy as np
+
+from repro.core import latency, topology, workload
+
+
+TOPO = topology.Topology(
+    n_machines=96, machines_per_rack=16, racks_per_pod=3, slots_per_machine=4
+)
+
+
+def test_tier_classification():
+    t = TOPO.tier_from(0)
+    assert t[0] == topology.TIER_SAME_MACHINE
+    assert t[1] == topology.TIER_RACK
+    assert t[16] == topology.TIER_POD  # rack 1, pod 0
+    assert t[48] == topology.TIER_INTER_POD  # rack 3, pod 1
+    tm = TOPO.tier_matrix()
+    assert np.array_equal(tm[0], t)
+    assert np.array_equal(tm, tm.T)
+
+
+def test_latency_symmetric_and_deterministic():
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=50, seed=0)
+    a = plane.latency_from(3, 10)
+    b = plane.latency_from(3, 10)
+    assert np.array_equal(a, b)
+    # pair symmetry
+    assert plane.latency_pair(3, 77, 10) == plane.latency_pair(77, 3, 10)
+    assert a[3] == latency.SAME_MACHINE_RTT_US
+
+
+def test_latency_tier_ordering_on_average():
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=200, seed=1)
+    lat = plane.latency_from(0, 100)
+    tiers = TOPO.tier_from(0)
+    rack = lat[tiers == topology.TIER_RACK].mean()
+    pod = lat[tiers == topology.TIER_POD].mean()
+    inter = lat[tiers == topology.TIER_INTER_POD].mean()
+    assert rack < pod < inter
+
+
+def test_latency_varies_over_time():
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=600, seed=2)
+    series = [plane.latency_pair(0, 60, t) for t in range(0, 600, 60)]
+    assert np.std(series) > 0.0
+
+
+def test_latency_pairs_matches_latency_from():
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=50, seed=3)
+    row = plane.latency_from(7, 20)
+    pairs = plane.latency_pairs(np.full(96, 7), np.arange(96), 20)
+    np.testing.assert_allclose(row, pairs, rtol=1e-6)
+
+
+def test_in_rack_coefficient_range():
+    # Paper: in-rack scaled U(0.5,1), i.e. never above the raw trace value.
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=30, seed=4)
+    t = 7
+    lat = plane.latency_from(0, t)
+    tiers = TOPO.tier_from(0)
+    raw = plane.series[topology.TIER_RACK, :, t].max()
+    assert lat[tiers == topology.TIER_RACK].max() <= raw + 1e-5
+
+
+def test_workload_no_single_task_jobs():
+    wl = workload.synth_workload(TOPO, duration_s=300, seed=5)
+    assert all(j.n_tasks >= 2 for j in wl.jobs)
+    assert all(0 <= j.arrival_s < 300 for j in wl.jobs)
+    # standing services present at t=0
+    assert any(j.arrival_s == 0 and j.duration_s == 300 for j in wl.jobs)
+
+
+def test_workload_mix_proportions():
+    wl = workload.synth_workload(TOPO, duration_s=2000, seed=6)
+    from repro.core.perf_model import APP_MODEL_INDEX
+
+    idx = np.asarray([j.perf_idx for j in wl.jobs])
+    frac_mem = (idx == APP_MODEL_INDEX["memcached"]).mean()
+    frac_spark = (idx == APP_MODEL_INDEX["spark"]).mean()
+    assert 0.3 < frac_mem < 0.7  # target 50%
+    assert frac_spark == 0.0  # paper excludes Spark from the mix
+
+
+def test_workload_budget():
+    wl = workload.synth_workload(TOPO, duration_s=500, seed=7, target_utilisation=0.5)
+    consumed = sum(j.n_tasks * min(j.duration_s, 500) for j in wl.jobs)
+    capacity = TOPO.n_machines * TOPO.slots_per_machine * 500
+    assert consumed <= 0.7 * capacity  # within budget (some overshoot slack)
+
+
+def test_ml_job_profiles():
+    j = workload.ml_job(0, "qwen3-1.7b", "train", n_hosts=4, duration_s=100.0)
+    from repro.core.perf_model import APP_MODEL_INDEX
+
+    assert j.perf_idx == APP_MODEL_INDEX["tensorflow"]
+    assert workload.ml_job(1, "rwkv6-7b", "scan_train", 4, 10.0).perf_idx == APP_MODEL_INDEX["strads"]
+    assert workload.ml_job(2, "qwen3-0.6b", "serve", 4, 10.0).perf_idx == APP_MODEL_INDEX["memcached"]

@@ -1,0 +1,168 @@
+"""Per-architecture smoke tests: reduced configs, one forward/train step on
+CPU, shape + finiteness asserts, and prefill->decode cache consistency
+against the full-sequence forward (the strong correctness check)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import LM
+
+ARCHS = configs.list_archs()
+
+
+def reduced(cfg: configs.ArchConfig) -> configs.ArchConfig:
+    """Small same-family variant runnable on CPU."""
+    pat_len = len(cfg.pattern)
+    n_layers = pat_len * 2 + len(cfg.remainder)  # 2 superblocks + remainder
+    return dataclasses.replace(
+        cfg,
+        n_layers=n_layers,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2) if cfg.n_kv_heads > 1 else 1,
+        head_dim=16,
+        d_ff=128,
+        vocab_size=256,
+        n_experts=4 if cfg.n_experts else 0,
+        experts_per_token=min(cfg.experts_per_token, 2) if cfg.n_experts else 0,
+        moe_capacity_factor=float(cfg.n_experts or 1),  # dropless in tests
+        rnn_width=64 if cfg.rnn_width else 0,
+        local_window=16 if cfg.local_window else 0,
+        n_image_tokens=8 if cfg.n_image_tokens else 0,
+        rwkv_head_dim=16,
+    )
+
+
+def _batch(cfg, rng, B=2, S=32):
+    batch = {}
+    if cfg.embed_inputs:
+        batch["embeds"] = jnp.asarray(
+            rng.normal(0, 1, (B, S, cfg.d_model)).astype(np.float32)
+        )
+        batch["targets"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)))
+    if cfg.n_image_tokens:
+        batch["images"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.n_image_tokens, cfg.d_model)).astype(np.float32)
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = reduced(configs.get_config(arch))
+    lm = LM(cfg)
+    rng = np.random.default_rng(0)
+    params = lm.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+    batch = _batch(cfg, rng)
+    logits = lm.forward(params, batch)
+    B, S = 2, 32
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits)).all()
+    loss = lm.loss(params, batch)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_reduces_loss_direction(arch):
+    cfg = reduced(configs.get_config(arch))
+    lm = LM(cfg)
+    rng = np.random.default_rng(1)
+    params = lm.init(jax.random.PRNGKey(1), dtype=jnp.float32)
+    batch = _batch(cfg, rng)
+    loss0, grads = jax.value_and_grad(lm.loss)(params, batch)
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in jax.tree_util.tree_leaves(grads))
+    )
+    assert np.isfinite(float(loss0))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+    lr = 1e-2 / max(float(gnorm), 1.0)
+    new_params = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    loss1 = lm.loss(new_params, batch)
+    assert float(loss1) < float(loss0), (float(loss0), float(loss1))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """Cache correctness: prefill(S) + decode(1) == forward(S+1) last logits."""
+    cfg = reduced(configs.get_config(arch))
+    lm = LM(cfg)
+    rng = np.random.default_rng(2)
+    B, S = 2, 32
+    params = lm.init(jax.random.PRNGKey(2), dtype=jnp.float32)
+
+    full = _batch(cfg, rng, B=B, S=S + 1)
+    logits_full = lm.forward(params, full)  # (B, S+1, V)
+
+    if cfg.embed_inputs:
+        prompt = {
+            "embeds": full["embeds"][:, :S],
+            "targets": full["targets"][:, :S],
+        }
+        step = {"embeds": full["embeds"][:, S:]}
+    else:
+        prompt = {"tokens": full["tokens"][:, :S]}
+        step = {"tokens": full["tokens"][:, S:]}
+    if cfg.n_image_tokens:
+        prompt["images"] = full["images"]
+
+    last_logits, cache, lengths = lm.prefill(
+        params, prompt, s_max=S + 8, cache_dtype=jnp.float32
+    )
+    np.testing.assert_allclose(
+        np.asarray(last_logits),
+        np.asarray(logits_full[:, S - 1]),
+        atol=2e-3,
+        rtol=2e-3,
+    )
+    dec_logits, cache, lengths = lm.decode_step(params, step, cache, lengths)
+    np.testing.assert_allclose(
+        np.asarray(dec_logits),
+        np.asarray(logits_full[:, S]),
+        atol=2e-3,
+        rtol=2e-3,
+    )
+    assert int(lengths[0]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "rwkv6-7b", "recurrentgemma-2b"])
+def test_multi_step_decode(arch):
+    cfg = reduced(configs.get_config(arch))
+    lm = LM(cfg)
+    rng = np.random.default_rng(3)
+    B, S, G = 2, 16, 5
+    params = lm.init(jax.random.PRNGKey(3), dtype=jnp.float32)
+    full = _batch(cfg, rng, B=B, S=S + G)
+    logits_full = lm.forward(params, full)
+    prompt = {"tokens": full["tokens"][:, :S]}
+    _, cache, lengths = lm.prefill(
+        params, prompt, s_max=S + G + 4, cache_dtype=jnp.float32
+    )
+    for g in range(G):
+        step = {"tokens": full["tokens"][:, S + g : S + g + 1]}
+        dec_logits, cache, lengths = lm.decode_step(params, step, cache, lengths)
+        np.testing.assert_allclose(
+            np.asarray(dec_logits),
+            np.asarray(logits_full[:, S + g]),
+            atol=5e-3,
+            rtol=5e-3,
+            err_msg=f"step {g}",
+        )
+
+
+def test_remat_matches_no_remat():
+    cfg = reduced(configs.get_config("qwen3-0.6b"))
+    lm = LM(cfg)
+    rng = np.random.default_rng(4)
+    params = lm.init(jax.random.PRNGKey(4), dtype=jnp.float32)
+    batch = _batch(cfg, rng)
+    l0 = float(lm.loss(params, batch, remat=False))
+    l1 = float(lm.loss(params, batch, remat=True))
+    assert abs(l0 - l1) < 1e-5

@@ -1,0 +1,88 @@
+"""Unit tests for the paper's performance-prediction functions (Eqs. 2-5)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import perf_model as pm
+
+
+def test_baseline_below_threshold():
+    # Paper: constant baseline performance below each threshold.
+    assert float(pm.MEMCACHED.evaluate(0.0)) == 1.0
+    assert float(pm.MEMCACHED.evaluate(39.9)) == 1.0
+    assert float(pm.STRADS.evaluate(19.0)) == 1.0
+    assert float(pm.SPARK.evaluate(199.0)) == 1.0
+    assert float(pm.TENSORFLOW.evaluate(39.0)) == 1.0
+
+
+def test_eq2_memcached_values():
+    # Spot-check Eq. 2 at x=100: 1.067 - .3093 + .04084 - .001898
+    x = 100.0
+    expect = 1.067 - 3.093e-3 * x + 4.084e-6 * x**2 - 1.898e-9 * x**3
+    assert float(pm.MEMCACHED.evaluate(x)) == pytest.approx(expect, rel=1e-6)
+
+
+def test_eq4_spark_linear():
+    x = 500.0
+    expect = 1.0199 - 1.161e-4 * x
+    assert float(pm.SPARK.evaluate(x)) == pytest.approx(expect, rel=1e-6)
+
+
+def test_out_of_range_uses_smallest_defined_value():
+    # Paper §6: out-of-domain latency -> smallest defined performance.
+    at_max = float(pm.MEMCACHED.evaluate(1000.0))
+    beyond = float(pm.MEMCACHED.evaluate(5000.0))
+    assert beyond == pytest.approx(at_max)
+
+
+def test_performance_monotone_non_increasing_in_domain():
+    grid = np.arange(0, 1001, 10, dtype=np.float32)
+    for m in pm.APP_MODEL_LIST:
+        vals = np.asarray(m.evaluate(grid))
+        assert np.all(np.diff(vals) <= 1e-6), m.name
+
+
+def test_perf_floor_supports_gamma():
+    # Paper sets gamma=1001 because normalised perf never drops below ~0.1
+    # => max cost 1000 < gamma.
+    for m in pm.APP_MODEL_LIST:
+        assert float(m.evaluate(1000.0)) >= 0.1, m.name
+        assert int(pm.perf_to_cost(m.evaluate(1000.0))) < 1001
+
+
+def test_lut_lookup_rounds_to_nearest_step():
+    lut = pm.perf_lut_table()
+    # 44us rounds to 40us; 46us rounds to 50us.
+    p44 = float(pm.lookup_perf(lut, 0, 44.0))
+    p40 = float(pm.MEMCACHED.evaluate(40.0))
+    p46 = float(pm.lookup_perf(lut, 0, 46.0))
+    p50 = float(pm.MEMCACHED.evaluate(50.0))
+    assert p44 == pytest.approx(p40, rel=1e-6)
+    assert p46 == pytest.approx(p50, rel=1e-6)
+
+
+def test_cost_examples_from_paper():
+    # §5.2: performance 1 -> cost 100; performance 0.1 -> cost 1000.
+    assert int(pm.perf_to_cost(1.0)) == 100
+    assert int(pm.perf_to_cost(0.1)) == 1000
+
+
+@given(st.floats(min_value=0.0, max_value=2000.0))
+@settings(max_examples=50, deadline=None)
+def test_cost_monotone_in_latency(lat):
+    lut = pm.perf_lut_table()
+    c1 = int(pm.cost_from_latency(lut, 0, lat))
+    c2 = int(pm.cost_from_latency(lut, 0, lat + 50.0))
+    assert c2 >= c1
+
+
+def test_fit_recovers_model():
+    # Fitting the paper's own curve + noise should recover it closely (Fig 3).
+    rng = np.random.default_rng(0)
+    x = np.arange(2, 1001, 10).astype(np.float64)
+    y = np.asarray(pm.MEMCACHED.evaluate(x)) + rng.normal(0, 0.005, x.shape)
+    fit = pm.fit_perf_model("refit", x, y, threshold_us=40.0)
+    r2 = pm.model_r2(fit, x[x >= 40], np.asarray(pm.MEMCACHED.evaluate(x[x >= 40])))
+    assert r2 > 0.99

@@ -1,0 +1,89 @@
+"""Extra hypothesis property tests across the scheduler stack."""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import auction, flow_network, latency, mcmf, perf_model, policy, topology
+
+TOPO = topology.Topology(
+    n_machines=64, machines_per_rack=8, racks_per_pod=2, slots_per_machine=4
+)
+PLANE = latency.LatencyPlane.synthesize(TOPO, duration_s=40, seed=9)
+
+
+@given(
+    st.integers(0, 63), st.integers(0, 63), st.integers(0, 39)
+)
+@settings(max_examples=40, deadline=None)
+def test_latency_pair_symmetric_positive(a, b, t):
+    lab = PLANE.latency_pair(a, b, t)
+    lba = PLANE.latency_pair(b, a, t)
+    assert lab == lba
+    assert lab > 0
+
+
+@given(st.integers(0, 63), st.integers(0, 39))
+@settings(max_examples=20, deadline=None)
+def test_intra_rack_coeff_bounds(m, t):
+    """In-rack pairs scale the raw trace by U(0.5, 1) (paper §6)."""
+    lat = PLANE.latency_from(m, t)
+    tiers = TOPO.tier_from(m)
+    raw = PLANE.series[topology.TIER_RACK, :, t % PLANE.duration_s]
+    in_rack = lat[tiers == topology.TIER_RACK]
+    if in_rack.size:
+        assert in_rack.max() <= raw.max() + 1e-4
+        assert in_rack.min() >= 0.5 * raw.min() - 1e-4
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=10, deadline=None)
+def test_auction_equals_mcmf_on_nomora_rounds_with_preemption(seed):
+    """Solver parity on *policy-derived* instances incl. running tasks with
+    beta discounts (not just random matrices)."""
+    rng = np.random.default_rng(seed)
+    T, J = int(rng.integers(3, 9)), 2
+    roots = rng.integers(0, TOPO.n_machines, size=J)
+    cur = np.full(T, -1, np.int64)
+    run_s = np.zeros(T, np.float32)
+    half = T // 2
+    cur[:half] = rng.integers(0, TOPO.n_machines, size=half)
+    run_s[:half] = rng.uniform(0, 3600, size=half)
+    state = policy.RoundState(
+        task_job=np.sort(rng.integers(0, J, size=T)),
+        perf_idx=rng.integers(0, 4, size=T),
+        root_machine=roots,
+        root_latency=np.stack([PLANE.latency_from(int(m), 7) for m in roots]),
+        wait_s=rng.uniform(0, 50, size=T).astype(np.float32),
+        run_s=run_s,
+        cur_machine=cur,
+        free_slots=rng.integers(0, 3, size=TOPO.n_machines).astype(np.int32),
+    )
+    params = policy.PolicyParams(preemption=True, beta_scale=0.05)
+    dc = policy.dense_costs(state, TOPO, params)
+
+    res = auction.solve_transportation(
+        dc.w,
+        dc.col_capacity[: TOPO.n_machines],
+        TOPO.n_machines,
+        TOPO.n_machines + state.task_job,
+        slots_per_machine=TOPO.slots_per_machine,
+    )
+    g = flow_network.build_flow_graph(state, TOPO, params, dc)
+    fr = mcmf.min_cost_max_flow(
+        g.src, g.dst, g.cap, g.cost, g.source, g.sink, g.n_nodes
+    )
+    assert fr.total_cost == res.total_cost
+
+
+@given(st.floats(0, 1000), st.floats(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_lut_vs_exact_within_discretisation(x, y):
+    """LUT lookup equals the exact function at grid points and never
+    deviates by more than one 10us step's worth elsewhere."""
+    lut = perf_model.perf_lut_table()
+    for m_idx, m in enumerate(perf_model.APP_MODEL_LIST):
+        look = float(perf_model.lookup_perf(lut, m_idx, x))
+        lo = float(m.evaluate(min(1000.0, (x // 10) * 10)))
+        hi = float(m.evaluate(min(1000.0, (x // 10 + 1) * 10)))
+        assert min(lo, hi) - 1e-6 <= look <= max(lo, hi) + 1e-6

@@ -1,0 +1,62 @@
+"""Roofline tool unit tests: HLO collective-byte parsing + term math."""
+
+import pytest
+
+from repro.launch import rooftool
+
+
+HLO = """
+HloModule jit_step
+
+ENTRY %main {
+  %p0 = bf16[128,1024]{1,0} parameter(0)
+  %ag = bf16[2048,1024]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = f32[256]{0} all-reduce(%x), to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%y), dimensions={0}
+  %cp = bf16[8,8]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ags = bf16[4096,16]{1,0} all-gather-start(%w), dimensions={0}
+  %dot = f32[16,16]{1,0} dot(%a, %b)
+  ROOT %t = tuple()
+}
+"""
+
+
+def test_collective_bytes_parses_types_and_sizes():
+    out = rooftool.collective_bytes(HLO)
+    assert out["all-gather"] == 2048 * 1024 * 2 + 4096 * 16 * 2  # incl -start
+    assert out["all-reduce"] == 256 * 4
+    assert out["reduce-scatter"] == 64 * 32 * 4
+    assert out["collective-permute"] == 8 * 8 * 2
+    assert out["count"] == 5  # dot not counted
+
+
+def test_shape_bytes_tuple():
+    assert rooftool._shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert rooftool._shape_bytes("pred[10]") == 10
+    assert rooftool._shape_bytes("token[]") == 0  # unknown dtype ignored
+
+
+def test_cell_analysis_terms_and_dominant():
+    c = rooftool.CellAnalysis(
+        flops_dev=197e12,  # exactly 1 second of compute
+        bytes_dev=819e9 * 2,  # 2 seconds of HBM
+        coll_bytes_dev=50e9 * 3,  # 3 seconds of ICI
+        coll_by_type={},
+        chips=256,
+    )
+    assert c.compute_s == pytest.approx(1.0)
+    assert c.memory_s == pytest.approx(2.0)
+    assert c.collective_s == pytest.approx(3.0)
+    assert c.dominant == "collective"
+    assert c.bound_s == pytest.approx(3.0)
+
+
+def test_two_point_reconstruction():
+    # f(0)=10 (outside), f(1)=14 => per-block 4; total at 8 blocks = 42.
+    assert rooftool.two_point(10.0, 14.0, 1) == 10.0
+    assert 10.0 + (14.0 - 10.0) * 7 == pytest.approx(38.0)
+
+
+def test_model_flops():
+    assert rooftool.model_flops(1e9, 1e6, "train") == pytest.approx(6e15)
+    assert rooftool.model_flops(1e9, 1e6, "prefill") == pytest.approx(2e15)

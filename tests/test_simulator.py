@@ -1,0 +1,89 @@
+"""Simulator behaviour tests (paper §6 semantics)."""
+
+import numpy as np
+import pytest
+
+from repro.core import latency, simulator, topology, workload
+from repro.core.policy import PolicyParams
+
+TOPO = topology.Topology(
+    n_machines=64, machines_per_rack=8, racks_per_pod=4, slots_per_machine=4
+)
+
+
+@pytest.fixture(scope="module")
+def plane():
+    return latency.LatencyPlane.synthesize(TOPO, duration_s=240, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return workload.synth_workload(TOPO, duration_s=240, seed=1, target_utilisation=0.35)
+
+
+def _run(wl, plane, **kw):
+    cfg = simulator.SimConfig(**kw)
+    return simulator.simulate(wl, plane, cfg)
+
+
+def test_all_policies_place_tasks(wl, plane):
+    for pol in ("random", "load_spreading", "nomora"):
+        m = _run(wl, plane, policy=pol, seed=2)
+        assert m.tasks_placed > 0, pol
+        s = m.summary()
+        assert 0 < s["avg_app_perf_area"] <= 100.0
+
+
+def test_root_scheduled_before_workers(wl, plane):
+    sim = simulator.Simulator(wl, plane, simulator.SimConfig(policy="nomora", seed=3))
+    sim.run()
+    for rec in sim.jobs.values():
+        root = rec.tasks[0]
+        for task in rec.tasks[1:]:
+            if task.placed_s >= 0 and root.placed_s >= 0:
+                assert root.placed_s <= task.placed_s, rec.job.job_id
+
+
+def test_slots_never_oversubscribed(wl, plane):
+    sim = simulator.Simulator(wl, plane, simulator.SimConfig(policy="nomora", seed=4))
+    sim.run()
+    assert sim.free_slots.min() >= 0
+    assert sim.free_slots.max() <= TOPO.slots_per_machine
+
+
+def test_response_time_at_least_duration(wl, plane):
+    sim = simulator.Simulator(wl, plane, simulator.SimConfig(policy="random", seed=5))
+    sim.run()
+    for rec in sim.jobs.values():
+        for task in rec.tasks:
+            if task.end_s >= 0:
+                assert task.end_s - task.submit_s >= rec.job.duration_s - 1e-6
+
+
+def test_nomora_beats_random_on_perf(wl, plane):
+    m_r = _run(wl, plane, policy="random", seed=6)
+    m_n = _run(wl, plane, policy="nomora", seed=6)
+    assert (
+        m_n.summary()["avg_app_perf_area"] > m_r.summary()["avg_app_perf_area"]
+    ), "NoMora must beat random placement on average application performance"
+
+
+def test_preemption_migrates_and_beta_reduces_migrations(wl, plane):
+    m0 = _run(
+        wl, plane, policy="nomora", seed=7, migration_interval_s=30,
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+    )
+    mb = _run(
+        wl, plane, policy="nomora", seed=7, migration_interval_s=30,
+        params=PolicyParams(preemption=True, beta_scale=100.0 / 3600.0),
+    )
+    assert m0.tasks_migrated > 0
+    assert mb.tasks_migrated <= m0.tasks_migrated
+
+
+def test_mcmf_solver_path_works(plane):
+    small = workload.synth_workload(
+        TOPO, duration_s=60, seed=8, target_utilisation=0.1
+    )
+    m = _run(small, plane, policy="nomora", solver="mcmf", seed=9)
+    assert m.tasks_placed > 0

@@ -1,0 +1,174 @@
+"""Solver correctness: SSP MCMF vs networkx, auction vs MCMF, and the
+DESIGN.md §5.1 collapse (explicit Quincy graph == dense transportation)."""
+
+import networkx as nx
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import auction, flow_network, latency, mcmf, policy, topology
+
+
+def _random_instance(rng, max_t=12, max_m=24):
+    T = int(rng.integers(2, max_t))
+    M = int(rng.integers(3, max_m))
+    J = int(rng.integers(1, 3))
+    w_m = rng.integers(100, 1000, size=(T, M)).astype(np.int64)
+    tj = rng.integers(0, J, size=T)
+    a = rng.integers(1001, 2000, size=T).astype(np.int64)
+    w = np.full((T, M + J), int(policy.INF_COST), np.int64)
+    w[:, :M] = w_m
+    w[np.arange(T), M + tj] = a
+    caps = rng.integers(0, 3, size=M).astype(np.int64)
+    return w, w_m, tj, a, caps, T, M, J
+
+
+def _nx_optimum(w_m, tj, a, caps, T, M, J):
+    G = nx.DiGraph()
+    for t in range(T):
+        G.add_edge("s", f"t{t}", capacity=1, weight=0)
+        for m in range(M):
+            G.add_edge(f"t{t}", f"m{m}", capacity=1, weight=int(w_m[t, m]))
+        G.add_edge(f"t{t}", f"u{tj[t]}", capacity=1, weight=int(a[t]))
+    for m in range(M):
+        G.add_edge(f"m{m}", "e", capacity=int(caps[m]), weight=0)
+    for j in range(J):
+        G.add_edge(f"u{j}", "e", capacity=T, weight=0)
+    fd = nx.max_flow_min_cost(G, "s", "e")
+    return nx.cost_of_flow(G, fd)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_auction_matches_networkx(seed):
+    rng = np.random.default_rng(seed)
+    w, w_m, tj, a, caps, T, M, J = _random_instance(rng)
+    res = auction.solve_transportation(w, caps, M, M + tj, slots_per_machine=4)
+    assert res.total_cost == _nx_optimum(w_m, tj, a, caps, T, M, J)
+    # Feasibility: machine capacities respected.
+    counts = np.bincount(res.assigned_col[res.assigned_col < M], minlength=M)
+    assert np.all(counts <= caps)
+    # Every task assigned to a machine or its own unscheduled column.
+    for t in range(T):
+        c = res.assigned_col[t]
+        assert (0 <= c < M) or c == M + tj[t]
+
+
+def _mcmf_on_bipartite(w_m, tj, a, caps, T, M, J):
+    """Bipartite graph solved by our SSP MCMF."""
+    # nodes: 0 source, 1..T tasks, T+1..T+M machines, T+M+1..T+M+J unsched, sink
+    src, dst, cap, cost = [], [], [], []
+    source = 0
+    task0, mach0, uns0 = 1, 1 + T, 1 + T + M
+    sink = uns0 + J
+    for t in range(T):
+        src += [source]
+        dst += [task0 + t]
+        cap += [1]
+        cost += [0]
+        for m in range(M):
+            src += [task0 + t]
+            dst += [mach0 + m]
+            cap += [1]
+            cost += [int(w_m[t, m])]
+        src += [task0 + t]
+        dst += [uns0 + int(tj[t])]
+        cap += [1]
+        cost += [int(a[t])]
+    for m in range(M):
+        src += [mach0 + m]
+        dst += [sink]
+        cap += [int(caps[m])]
+        cost += [0]
+    for j in range(J):
+        src += [uns0 + j]
+        dst += [sink]
+        cap += [T]
+        cost += [0]
+    return mcmf.min_cost_max_flow(
+        np.asarray(src), np.asarray(dst), np.asarray(cap), np.asarray(cost),
+        source, sink, sink + 1,
+    )
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_mcmf_matches_networkx(seed):
+    rng = np.random.default_rng(100 + seed)
+    w, w_m, tj, a, caps, T, M, J = _random_instance(rng, max_t=8, max_m=12)
+    fr = _mcmf_on_bipartite(w_m, tj, a, caps, T, M, J)
+    assert fr.total_flow == T
+    assert fr.total_cost == _nx_optimum(w_m, tj, a, caps, T, M, J)
+
+
+def _round_state(rng, topo, plane, T=8, J=2, t=5):
+    roots = rng.integers(0, topo.n_machines, size=J)
+    task_job = np.sort(rng.integers(0, J, size=T))
+    return policy.RoundState(
+        task_job=task_job,
+        perf_idx=rng.integers(0, 4, size=T),
+        root_machine=roots,
+        root_latency=np.stack([plane.latency_from(int(m), t) for m in roots]),
+        wait_s=rng.uniform(0, 30, size=T).astype(np.float32),
+        run_s=np.zeros(T, np.float32),
+        cur_machine=np.full(T, -1, np.int64),
+        free_slots=rng.integers(0, 4, size=topo.n_machines).astype(np.int32),
+    )
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_flow_network_collapse_equals_transportation(seed):
+    """The paper-faithful Quincy graph and the collapsed dense instance
+    must have identical optimal cost (DESIGN.md §5.1)."""
+    rng = np.random.default_rng(200 + seed)
+    topo = topology.Topology(
+        n_machines=48, machines_per_rack=8, racks_per_pod=3, slots_per_machine=4
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=30, seed=seed)
+    state = _round_state(rng, topo, plane)
+    params = policy.PolicyParams()
+    dc = policy.dense_costs(state, topo, params)
+
+    g = flow_network.build_flow_graph(state, topo, params, dc)
+    fr = mcmf.min_cost_max_flow(g.src, g.dst, g.cap, g.cost, g.source, g.sink, g.n_nodes)
+
+    res = auction.solve_transportation(
+        dc.w,
+        dc.col_capacity[: topo.n_machines],
+        topo.n_machines,
+        topo.n_machines + state.task_job,
+        slots_per_machine=topo.slots_per_machine,
+    )
+    assert fr.total_flow == state.n_tasks
+    assert fr.total_cost == res.total_cost
+
+    # The extracted Quincy assignment costs the same as the flow value.
+    cols = flow_network.extract_assignment(g, fr.flow, state)
+    assert (cols >= 0).all()
+    w_cost = dc.w[np.arange(state.n_tasks), cols].sum()
+    assert int(w_cost) == fr.total_cost
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=15, deadline=None)
+def test_auction_property_random(seed):
+    rng = np.random.default_rng(seed)
+    w, w_m, tj, a, caps, T, M, J = _random_instance(rng, max_t=8, max_m=10)
+    res = auction.solve_transportation(w, caps, M, M + tj, slots_per_machine=4)
+    assert res.total_cost == _nx_optimum(w_m, tj, a, caps, T, M, J)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=15, deadline=None)
+def test_auction_inexact_mode_bound(seed):
+    """The scheduler's fast mode (exact=False, eps=1 original unit +
+    tie jitter<=9) must stay within (eps + jitter-1) * T of the optimum."""
+    rng = np.random.default_rng(seed)
+    w, w_m, tj, a, caps, T, M, J = _random_instance(rng, max_t=10, max_m=12)
+    res = auction.solve_transportation(
+        w, caps, M, M + tj, slots_per_machine=4, exact=False, tie_jitter=9
+    )
+    opt = _nx_optimum(w_m, tj, a, caps, T, M, J)
+    assert opt <= res.total_cost <= opt + (1 + 8) * T
+    # feasibility under the fast mode too
+    counts = np.bincount(res.assigned_col[res.assigned_col < M], minlength=M)
+    assert np.all(counts <= caps)

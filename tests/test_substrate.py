@@ -1,0 +1,190 @@
+"""Substrate tests: checkpoint manager, data pipeline, optimizer,
+gradient compression, straggler detector, elastic mesh."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLMData
+from repro.distributed.straggler import StragglerDetector
+from repro.optim import AdamW, AdamWConfig, cosine_schedule
+from repro.optim import compression
+
+
+# ---------------------------------------------------------------- checkpoint
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "nested": {"b": jnp.arange(10, dtype=jnp.int32), "c": jnp.ones((3,))},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(5, tree, blocking=True)
+    out = mgr.restore(tree)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a), np.asarray(b)),
+        tree,
+        out,
+    )
+    assert mgr.latest_step() == 5
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_last_n=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _tree(s), blocking=True)
+    assert mgr.steps() == [3, 4]
+    out = mgr.restore(_tree())
+    np.testing.assert_array_equal(
+        np.asarray(out["a"]), np.asarray(_tree(4)["a"])
+    )
+
+
+def test_checkpoint_detects_corruption(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree(), blocking=True)
+    # Corrupt one leaf file.
+    d = os.path.join(str(tmp_path), "step_00000001")
+    victim = sorted(f for f in os.listdir(d) if f.endswith(".npy"))[0]
+    arr = np.load(os.path.join(d, victim))
+    arr = np.asarray(arr).copy()
+    arr.flat[0] += 1
+    np.save(os.path.join(d, victim), arr)
+    with pytest.raises(IOError):
+        mgr.restore(_tree())
+
+
+def test_checkpoint_tmp_dir_ignored(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    os.makedirs(os.path.join(str(tmp_path), "step_00000099.tmp"))
+    assert mgr.latest_step() is None  # partial writes are never visible
+
+
+# ---------------------------------------------------------------- data
+
+
+def test_data_deterministic_and_sharded():
+    cfg = DataConfig(vocab_size=128, seq_len=32, global_batch=8, seed=3)
+    d1 = SyntheticLMData(cfg)
+    d2 = SyntheticLMData(cfg)
+    b1 = d1.batch(7)
+    b2 = d2.batch(7)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # Host shards are disjoint slices of the same global stream seeds.
+    h0 = d1.batch(7, host_id=0, n_hosts=2)
+    h1 = d1.batch(7, host_id=1, n_hosts=2)
+    assert h0["tokens"].shape == (4, 32)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+    assert b1["tokens"].min() >= 0 and b1["tokens"].max() < 128
+
+
+def test_data_markov_learnable():
+    # Markov mode must have non-uniform transition statistics.
+    cfg = DataConfig(vocab_size=64, seq_len=256, global_batch=8, mode="markov")
+    data = SyntheticLMData(cfg)
+    toks = data.batch(0)["tokens"]
+    pairs = {}
+    for row in toks:
+        for a, b in zip(row[:-1], row[1:]):
+            pairs[(a, b)] = pairs.get((a, b), 0) + 1
+    # top pair should be much more frequent than the uniform expectation
+    top = max(pairs.values())
+    assert top > 3 * (toks.size / 64**2)
+
+
+def test_pack_documents():
+    from repro.data.pipeline import pack_documents
+
+    docs = [np.arange(5), np.arange(3), np.arange(10)]
+    rows = pack_documents(docs, seq_len=8, eos=99)
+    assert rows.shape[1] == 8
+    flat = rows.flatten().tolist()
+    assert flat.count(99) >= 3  # one EOS per doc (+ padding)
+
+
+# ---------------------------------------------------------------- optimizer
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(AdamWConfig(lr=0.1, weight_decay=0.0))
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * state.params["w"]}  # d/dw of w^2
+        state = opt.apply(state, grads)
+    assert float(jnp.abs(state.params["w"]).max()) < 0.1
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(AdamWConfig(lr=1.0, grad_clip_norm=1.0, weight_decay=0.0))
+    params = {"w": jnp.zeros((4,))}
+    state = opt.init(params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    state = opt.apply(state, huge)
+    assert float(jnp.abs(state.params["w"]).max()) < 2.0
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(fn(jnp.asarray(s))) for s in (0, 5, 10, 50, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(1e-4, rel=0.01)
+
+
+# ---------------------------------------------------------------- compression
+
+
+def test_quantize_error_feedback_reduces_bias():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(0, 1, (256,)).astype(np.float32))
+    err = jnp.zeros_like(g)
+    # Accumulated dequantised sum with error feedback tracks the true sum.
+    acc = jnp.zeros_like(g)
+    true = jnp.zeros_like(g)
+    for _ in range(50):
+        q, scale, err = compression.quantize(g, err)
+        acc = acc + compression.dequantize(q, scale)
+        true = true + g
+    rel = float(jnp.abs(acc - true).max() / jnp.abs(true).max())
+    assert rel < 0.01
+
+
+def test_quantize_bounds():
+    g = jnp.asarray([1000.0, -1000.0, 0.5])
+    q, scale, err = compression.quantize(g, jnp.zeros_like(g))
+    assert int(jnp.abs(q).max()) <= 127
+    np.testing.assert_allclose(
+        np.asarray(compression.dequantize(q, scale) + err), np.asarray(g), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------- straggler
+
+
+def test_straggler_detector_flags_persistent_low_perf():
+    det = StragglerDetector(threshold=0.8, patience=3, alpha=1.0)
+    assert not det.observe(1, 0.5)
+    assert not det.observe(1, 0.5)
+    assert det.observe(1, 0.5)  # 3rd consecutive
+    det.clear(1)
+    assert not det.observe(1, 0.95)
+
+
+def test_straggler_detector_recovers():
+    det = StragglerDetector(threshold=0.8, patience=2, alpha=1.0)
+    det.observe(2, 0.5)
+    det.observe(2, 0.95)  # recovery resets the counter
+    assert not det.observe(2, 0.5)
