@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures covered:
   Fig. 7  migrations         - migrated-task percentage (preemption)
   Fig. 8  placement_latency  - submission -> placement latency
   Fig. 9  response_time      - submission -> completion
+  (extra) sweep_bench        - SoA engine speedup + multi-scenario sweep
   (extra) kernel_bench       - scheduler kernel microbenchmarks
 
 REPRO_BENCH_SCALE={small,medium,paper} controls simulation size.
@@ -27,6 +28,7 @@ def main() -> None:
         placement_latency,
         placement_quality,
         response_time,
+        sweep_bench,
     )
 
     modules = [
@@ -36,6 +38,7 @@ def main() -> None:
         ("migrations", migrations),
         ("placement_latency", placement_latency),
         ("response_time", response_time),
+        ("sweep_bench", sweep_bench),
         ("kernel_bench", kernel_bench),
     ]
     print("name,us_per_call,derived")

@@ -1,0 +1,183 @@
+"""Vectorized-engine speedup + multi-scenario sweep benchmark.
+
+Two sections, both written to benchmarks/results/sweep_bench.json:
+
+1. `engine_speedup`: the ISSUE-1 acceptance run — a 1,000-machine,
+   500-job workload replayed by the seed per-object loop
+   (`reference_sim.ReferenceSimulator`) and the vectorized SoA engine
+   (`simulator.Simulator`) under identical configs (`fixed_algo_s=0` so
+   both emit bit-identical metrics, which is asserted). Reported speedup
+   must stay >= 3x.
+2. `sweep`: a (policy x scenario) grid through `core.sweep.run_sweep`
+   on a smaller cluster, demonstrating the multi-scenario runner and
+   recording per-scenario average-application-performance areas.
+
+REPRO_BENCH_SCALE only affects the sweep section; the speedup section is
+pinned to the acceptance scale so JSON results stay comparable.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results", "sweep_bench.json")
+
+# Acceptance scale: 1,000 machines, 500 jobs (paper topology tiers).
+N_MACHINES = 1_000
+N_JOBS = 500
+DURATION_S = 1_800
+SEED = 42
+
+
+def bench_workload(topo, duration_s: int, n_jobs: int = N_JOBS, seed: int = SEED):
+    """A 500-job Google-shaped workload with the trace's wide-job tail
+    (the per-task loops the SoA engine removes scale with job width)."""
+    from repro.core import workload
+    from repro.core.perf_model import APP_MODEL_INDEX
+
+    rng = np.random.default_rng(seed)
+    n_standing = n_jobs // 4
+    names = ["memcached", "strads", "tensorflow"]
+    idx = np.asarray([APP_MODEL_INDEX[n] for n in names])
+    perf = idx[rng.choice(3, size=n_jobs, p=[0.5, 0.25, 0.25])]
+    n_tasks = np.clip(
+        np.round(np.exp(rng.normal(2.3, 0.7, n_jobs))).astype(np.int64), 3, 48
+    )
+    arrivals = np.concatenate(
+        [np.zeros(n_standing), np.sort(rng.uniform(0, duration_s * 0.6, n_jobs - n_standing))]
+    )
+    durs = np.clip(np.exp(rng.normal(np.log(400.0), 1.0, n_jobs)), 60.0, None)
+    durs[:n_standing] = duration_s
+    jobs = [
+        workload.Job(
+            job_id=i,
+            arrival_s=float(arrivals[i]),
+            n_tasks=int(n_tasks[i]),
+            duration_s=float(min(durs[i], duration_s - arrivals[i])),
+            perf_idx=int(perf[i]),
+        )
+        for i in range(n_jobs)
+    ]
+    return workload.Workload(jobs=jobs, duration_s=duration_s, topo=topo)
+
+
+def _metrics_equal(a, b) -> bool:
+    return (
+        a.tasks_placed == b.tasks_placed
+        and a.tasks_migrated == b.tasks_migrated
+        and a.rounds == b.rounds
+        and a.placement_latency_s == b.placement_latency_s
+        and a.response_time_s == b.response_time_s
+        and a.per_job_perf == b.per_job_perf
+    )
+
+
+def engine_speedup():
+    from repro.core import latency, perf_model, simulator, topology
+    from repro.core.reference_sim import ReferenceSimulator
+
+    perf_model.perf_lut_table()  # warm the one-time JAX LUT compile
+    topo = topology.Topology(
+        n_machines=N_MACHINES, machines_per_rack=48, racks_per_pod=16,
+        slots_per_machine=4,
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=DURATION_S, seed=SEED)
+    wl = bench_workload(topo, DURATION_S)
+
+    out = {
+        "n_machines": N_MACHINES,
+        "n_jobs": len(wl.jobs),
+        "n_tasks": wl.n_tasks_total,
+        "duration_s": DURATION_S,
+        "policies": {},
+    }
+    for policy in ("random", "load_spreading"):
+        cfg = simulator.SimConfig(policy=policy, seed=7, fixed_algo_s=0.0)
+        t0 = time.perf_counter()
+        m_ref = ReferenceSimulator(wl, plane, cfg).run()
+        t_ref = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        m_vec = simulator.Simulator(wl, plane, cfg).run()
+        t_vec = time.perf_counter() - t0
+        parity = _metrics_equal(m_ref, m_vec)
+        assert parity, f"vectorized engine diverged from reference on {policy}"
+        out["policies"][policy] = {
+            "reference_wall_s": t_ref,
+            "vectorized_wall_s": t_vec,
+            "speedup": t_ref / t_vec,
+            "metrics_bit_identical": parity,
+            "tasks_placed": m_vec.tasks_placed,
+        }
+    out["min_speedup"] = min(p["speedup"] for p in out["policies"].values())
+    # ISSUE-1 acceptance gate — fail loudly if the engine regresses.
+    assert out["min_speedup"] >= 3.0, (
+        f"vectorized engine speedup {out['min_speedup']:.2f}x fell below the "
+        "3x acceptance floor"
+    )
+    return out
+
+
+def scenario_sweep():
+    from repro.core.scenarios import SCENARIOS
+    from repro.core.sweep import SweepSpec, run_sweep
+
+    scale = os.environ.get("REPRO_BENCH_SCALE", "small")
+    if scale == "paper":
+        n_machines, duration_s, seeds = 12_500, 86_400, (0, 1, 2)
+        mpr, rpp = 48, 16
+    elif scale == "medium":
+        n_machines, duration_s, seeds = 512, 600, (0, 1)
+        mpr, rpp = 16, 4
+    else:
+        n_machines, duration_s, seeds = 128, 240, (0,)
+        mpr, rpp = 16, 4
+    spec = SweepSpec(
+        n_machines=n_machines,
+        machines_per_rack=mpr,
+        racks_per_pod=rpp,
+        duration_s=duration_s,
+        policies=("random", "load_spreading", "nomora"),
+        seeds=seeds,
+        scenarios=tuple(SCENARIOS),
+        fixed_algo_s=None,  # measured solver time, as in the other figures
+    )
+    return run_sweep(spec)
+
+
+def run():
+    rows = []
+    speedup = engine_speedup()
+    for policy, p in speedup["policies"].items():
+        rows.append(
+            (
+                f"sweep_engine_{policy}_speedup",
+                p["vectorized_wall_s"] * 1e6,
+                f"{p['speedup']:.2f}x_ref_{p['reference_wall_s']:.2f}s",
+            )
+        )
+    rows.append(("sweep_engine_min_speedup", 0.0, f"{speedup['min_speedup']:.2f}x"))
+
+    result = scenario_sweep()
+    for cell in result.cells:
+        rows.append(
+            (
+                f"sweep_{cell.scenario}_{cell.policy}_s{cell.seed}",
+                cell.wall_s * 1e6,
+                f"perf_area_{cell.summary['avg_app_perf_area']:.2f}",
+            )
+        )
+
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    payload = {
+        "engine_speedup": speedup,
+        "sweep": result.to_jsonable(),
+    }
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    rows.append(("sweep_results_json", 0.0, os.path.relpath(RESULTS_PATH)))
+    return rows

@@ -6,18 +6,26 @@ Layers (paper §5.1 architecture):
   3. policy      - the latency-driven, application-performance-aware policy
   4. mcmf        - paper-faithful min-cost max-flow solver (flow_network)
      auction     - TPU-native epsilon-scaling auction solver (production)
-  5. simulator   - event-driven evaluation harness (paper §6)
+  5. simulator   - event-driven evaluation harness (paper §6), vectorized
+     (structure-of-arrays; seed per-object loop kept in reference_sim as
+     the parity oracle)
+  6. scenarios   - declarative perturbation presets (failures, hotspots)
+     sweep       - (policy x seed x scenario) grid runner
 """
 
 from . import (  # noqa: F401
     auction,
+    engine,
     flow_network,
     latency,
     mcmf,
     metrics,
     perf_model,
     policy,
+    reference_sim,
+    scenarios,
     simulator,
+    sweep,
     topology,
     workload,
 )

@@ -1,0 +1,150 @@
+"""Scenario presets for multi-configuration simulator sweeps.
+
+A `Scenario` bundles the workload-independent perturbations a sweep cell
+runs under: machine-failure bursts (the paper's cluster events), latency
+hotspots (Fig. 2's VM-placement latency regimes, exaggerated into a
+congestion event), preemption/migration settings, and straggler-detection
+thresholds (§7). Scenarios are declarative and deterministic: every random
+choice (which machines fail, which traces run hot) derives from the
+scenario seed, so a (policy x seed x scenario) sweep cell is reproducible
+bit-for-bit.
+
+The preset grid covers the evaluation axes the paper varies one at a time
+— baseline replay, preemption on, machine failures, straggler-heavy, and
+hotspot latency — so `sweep.run_sweep` can replay every policy across all
+of them in one call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import Dict, Mapping, Optional, Tuple
+
+import numpy as np
+
+from .latency import LatencyPlane
+from .policy import PolicyParams
+from .topology import TIER_INTER_POD, TIER_POD, Topology
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One named perturbation bundle for a sweep cell."""
+
+    name: str
+    description: str
+    # synth_workload overrides (e.g. target_utilisation).
+    workload_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    # SimConfig field overrides (e.g. migration_interval_s).
+    config_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    # PolicyParams field overrides (e.g. preemption).
+    params_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    # Machine-failure bursts: at each time fraction, remove failure_frac
+    # of the machines (sampled without replacement from the still-alive set).
+    failure_burst_at: Tuple[float, ...] = ()
+    failure_frac: float = 0.0
+    # Latency hotspot: scale `hotspot_traces` of the per-tier trace pool in
+    # `hotspot_tiers` by `hotspot_scale` inside the [lo, hi) duration
+    #-fraction window. Pairs hashed onto the scaled traces run hot; the
+    # rest keep the baseline series (hot/cold contrast is the point).
+    hotspot_tiers: Tuple[int, ...] = ()
+    hotspot_scale: float = 1.0
+    hotspot_traces: int = 3
+    hotspot_window: Tuple[float, float] = (0.0, 1.0)
+    # Straggler mitigation threshold (requires preemption to act).
+    straggler_threshold: Optional[float] = None
+
+    # ------------------------------------------------------------------ #
+
+    def failures(
+        self, topo: Topology, duration_s: int, seed: int
+    ) -> Tuple[Tuple[int, int], ...]:
+        """Deterministic ((t, machine), ...) failure events for SimConfig."""
+        if not self.failure_burst_at or self.failure_frac <= 0.0:
+            return ()
+        # zlib.crc32 is stable across processes (str hash is salted).
+        rng = np.random.default_rng((seed, zlib.crc32(self.name.encode())))
+        per_burst = max(1, int(round(self.failure_frac * topo.n_machines)))
+        alive = np.arange(topo.n_machines)
+        events = []
+        for frac in self.failure_burst_at:
+            t = int(frac * duration_s)
+            victims = rng.choice(alive, size=min(per_burst, len(alive)), replace=False)
+            alive = np.setdiff1d(alive, victims)
+            events.extend((t, int(m)) for m in victims)
+        return tuple(events)
+
+    def plane(self, base: LatencyPlane, duration_s: int) -> LatencyPlane:
+        """The scenario's latency plane: `base` itself when unperturbed
+        (planes are shared across sweep cells), else a copy with the
+        hotspot traces scaled inside the window."""
+        if not self.hotspot_tiers or self.hotspot_scale == 1.0:
+            return base
+        series = base.series.copy()
+        lo = int(self.hotspot_window[0] * duration_s)
+        hi = int(self.hotspot_window[1] * duration_s)
+        n = min(self.hotspot_traces, series.shape[1])
+        for tier in self.hotspot_tiers:
+            series[tier, :n, lo:hi] *= self.hotspot_scale
+        return LatencyPlane(topo=base.topo, series=series, seed=base.seed)
+
+    def sim_config_kwargs(self, topo: Topology, duration_s: int, seed: int) -> Dict:
+        """SimConfig kwargs (minus policy/seed) for this scenario."""
+        out = dict(self.config_kwargs)
+        out["failures"] = self.failures(topo, duration_s, seed)
+        if self.straggler_threshold is not None:
+            out["straggler_threshold"] = self.straggler_threshold
+        return out
+
+    def policy_params(self, **base) -> PolicyParams:
+        """PolicyParams with the scenario's overrides applied over `base`."""
+        return PolicyParams(**{**base, **self.params_kwargs})
+
+
+SCENARIOS: Dict[str, Scenario] = {
+    s.name: s
+    for s in (
+        Scenario(
+            name="baseline",
+            description="Google-shaped synthetic trace, no perturbations",
+        ),
+        Scenario(
+            name="preemption",
+            description="periodic migration rounds (paper Fig. 7/9, beta=0)",
+            params_kwargs={"preemption": True, "beta_scale": 0.0},
+            config_kwargs={"migration_interval_s": 30},
+        ),
+        Scenario(
+            name="failure_bursts",
+            description="2% of machines fail at t=1/3 and t=2/3 (cluster events)",
+            failure_burst_at=(1.0 / 3.0, 2.0 / 3.0),
+            failure_frac=0.02,
+        ),
+        Scenario(
+            name="straggler_heavy",
+            description="hot traces all run + straggler-triggered migration (§7)",
+            params_kwargs={"preemption": True, "beta_scale": 0.0},
+            config_kwargs={"migration_interval_s": 10_000_000},  # stragglers only
+            straggler_threshold=0.9,
+            hotspot_tiers=(TIER_POD, TIER_INTER_POD),
+            hotspot_scale=3.0,
+        ),
+        Scenario(
+            name="hotspot_latency",
+            description="4x latency on half the pod/inter-pod traces mid-run",
+            hotspot_tiers=(TIER_POD, TIER_INTER_POD),
+            hotspot_scale=4.0,
+            hotspot_window=(0.3, 0.8),
+        ),
+    )
+}
+
+
+def get_scenario(name: str) -> Scenario:
+    try:
+        return SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
+        ) from None

@@ -1,4 +1,4 @@
-"""Event-driven cluster scheduling simulator (paper §6).
+"""Event-driven cluster scheduling simulator (paper §6) — vectorized engine.
 
 Replays a workload against a topology + latency plane under one of the
 policies {nomora, random, load_spreading}, collecting the paper's §6
@@ -20,6 +20,16 @@ Migration semantics: tasks move without restart (client/server semantics —
 half the mix is Memcached; DESIGN.md records this interpretation). The
 response-time penalty of preemption emerges from longer rounds and
 re-placements, as in the paper's Fig. 9 discussion.
+
+Engine: task state is structure-of-arrays (`engine.TaskTable`) and every
+per-round loop of the seed implementation (admit, retire, wait accrual,
+failure re-queue, ready scans, metric accumulation) is a masked numpy
+vector op over dense task-id arrays — the step that makes Google-trace
+scale (12,500 machines, weeks of events) reachable. The seed per-object
+loop survives unchanged in `reference_sim.ReferenceSimulator`;
+tests/test_engine_parity.py proves the two emit bit-identical `SimMetrics`
+at fixed seeds (set `SimConfig.fixed_algo_s` to pin the one
+non-deterministic input, measured solver wall time).
 """
 
 from __future__ import annotations
@@ -31,6 +41,7 @@ from typing import Dict, List, Literal, Optional
 import numpy as np
 
 from . import auction, flow_network, mcmf, perf_model
+from .engine import EMPTY_IDS, JobTable, TaskTable, drop_positions, take_ready
 from .latency import LatencyPlane
 from .metrics import SimMetrics
 from .policy import (
@@ -57,6 +68,8 @@ PolicyName = Literal[
 
 @dataclasses.dataclass
 class TaskRec:
+    """Per-task view record (materialised from the SoA arrays on demand)."""
+
     job_id: int
     task_idx: int  # 0 == root
     submit_s: float
@@ -94,9 +107,15 @@ class SimConfig:
     # Straggler mitigation (paper §7): migrate jobs whose predicted perf
     # EWMA stays below this threshold (requires preemption).
     straggler_threshold: float | None = None
+    # Deterministic stand-in for measured solver wall time. Placement and
+    # response times include the round's algorithm runtime, so wall-clock
+    # jitter leaks into the metrics; parity tests pin it (usually to 0.0).
+    fixed_algo_s: float | None = None
 
 
 class Simulator:
+    """Vectorized structure-of-arrays simulator (public API unchanged)."""
+
     def __init__(
         self,
         workload: Workload,
@@ -115,12 +134,16 @@ class Simulator:
         M = self.topo.n_machines
         self.free_slots = np.full(M, self.topo.slots_per_machine, np.int32)
         self.task_counts = np.zeros(M, np.int64)  # for load-spreading
-        self.jobs: Dict[int, JobRec] = {}
-        self.pending_roots: List[TaskRec] = []
-        self.pending: List[TaskRec] = []  # non-root tasks awaiting placement
-        self.running: List[TaskRec] = []
+        self.tt = TaskTable(capacity=workload.n_tasks_total)
+        self.jt = JobTable(capacity=len(workload.jobs))
+        self._job_objs: List[Job] = []
+        self._job_span: List[tuple] = []  # dense job -> (lo, hi) task ids
+        self.pending_roots: np.ndarray = EMPTY_IDS  # root task ids, queue order
+        self.pending: np.ndarray = EMPTY_IDS  # non-root task ids, queue order
+        self.running: np.ndarray = EMPTY_IDS  # placed task ids, start order
         self.warm_prices: Optional[np.ndarray] = None
         self.dead: set = set()  # failed machines
+        self.dead_mask = np.zeros(M, bool)
         self._failures = sorted(config.failures)
         from repro.distributed.straggler import StragglerDetector
 
@@ -133,6 +156,41 @@ class Simulator:
 
     # ------------------------------------------------------------------ #
 
+    @property
+    def jobs(self) -> Dict[int, JobRec]:
+        """Per-object view of the SoA state (seed-compatible read API).
+
+        Materialised on access; mutating the returned records does not
+        write back into the engine.
+        """
+        tt, jt = self.tt, self.jt
+        out: Dict[int, JobRec] = {}
+        for j in range(jt.n):
+            job = self._job_objs[j]
+            lo, hi = self._job_span[j]
+            tasks = [
+                TaskRec(
+                    job_id=job.job_id,
+                    task_idx=int(tt.task_idx[i]),
+                    submit_s=float(tt.submit_s[i]),
+                    machine=int(tt.machine[i]),
+                    start_s=float(tt.start_s[i]),
+                    placed_s=float(tt.placed_s[i]),
+                    end_s=float(tt.end_s[i]),
+                    wait_s=float(tt.wait_s[i]),
+                )
+                for i in range(lo, hi)
+            ]
+            out[job.job_id] = JobRec(
+                job=job,
+                tasks=tasks,
+                root_machine=int(jt.root_machine[j]),
+                done=bool(jt.done[j]),
+            )
+        return out
+
+    # ------------------------------------------------------------------ #
+
     def run(self) -> SimMetrics:
         cfg = self.cfg
         duration = self.wl.duration_s
@@ -140,10 +198,13 @@ class Simulator:
         next_job = next(jobs_iter, None)
 
         for t in range(0, duration, cfg.round_interval_s):
-            # 1. Admit arrivals.
+            # 1. Admit arrivals (batched: one queue concatenate per tick).
+            arrivals = []
             while next_job is not None and next_job.arrival_s <= t:
-                self._admit(next_job, t)
+                arrivals.append(next_job)
                 next_job = next(jobs_iter, None)
+            if arrivals:
+                self._admit(arrivals, t)
 
             # 1b. Machine-removal events (fault tolerance).
             while self._failures and self._failures[0][0] <= t:
@@ -160,7 +221,12 @@ class Simulator:
                 and t % cfg.migration_interval_s == 0
             )
             straggler_round = bool(self._straggler_jobs)
-            if self.pending_roots or self.pending or migration_round or straggler_round:
+            if (
+                len(self.pending_roots)
+                or len(self.pending)
+                or migration_round
+                or straggler_round
+            ):
                 self._round(t, migration_round or straggler_round)
 
             # 4. Performance sampling.
@@ -168,22 +234,30 @@ class Simulator:
                 self._sample_perf(t)
 
             # 5. Wait-time accrual.
-            for task in self.pending:
-                task.wait_s += cfg.round_interval_s
+            if len(self.pending):
+                self.tt.wait_s[self.pending] += cfg.round_interval_s
 
         return self.metrics
 
     # ------------------------------------------------------------------ #
 
-    def _admit(self, job: Job, t: float) -> None:
-        tasks = [
-            TaskRec(job_id=job.job_id, task_idx=i, submit_s=float(max(t, job.arrival_s)))
-            for i in range(job.n_tasks)
-        ]
-        rec = JobRec(job=job, tasks=tasks)
-        self.jobs[job.job_id] = rec
-        self.pending_roots.append(tasks[0])
-        self.pending.extend(tasks[1:])
+    def _algo_s(self, measured: float) -> float:
+        return measured if self.cfg.fixed_algo_s is None else self.cfg.fixed_algo_s
+
+    def _admit(self, jobs: List[Job], t: float) -> None:
+        """Admit one tick's arrivals (arrival order == dense-id order)."""
+        roots, workers = [self.pending_roots], [self.pending]
+        for job in jobs:
+            j = self.jt.append(
+                job.job_id, float(job.duration_s), int(job.perf_idx), job.n_tasks
+            )
+            ids = self.tt.append_job(j, job.n_tasks, float(max(t, job.arrival_s)))
+            self._job_objs.append(job)
+            self._job_span.append((int(ids[0]), int(ids[-1]) + 1))
+            roots.append(ids[:1])
+            workers.append(ids[1:])
+        self.pending_roots = np.concatenate(roots)
+        self.pending = np.concatenate(workers)
 
     def _fail_machine(self, machine: int, t: float) -> None:
         """Machine removal: zero its capacity, re-queue its tasks (the
@@ -191,66 +265,103 @@ class Simulator:
         if machine in self.dead:
             return
         self.dead.add(machine)
+        self.dead_mask[machine] = True
         self.free_slots[machine] = 0
         self.task_counts[machine] = 0
-        still = []
-        for task in self.running:
-            if task.machine == machine:
-                task.machine = -1
-                task.start_s = -1.0
-                task.end_s = -1.0
-                task.wait_s = 0.0
-                rec = self.jobs[task.job_id]
-                if task.task_idx == 0:
-                    rec.root_machine = -1
-                    self.pending_roots.append(task)
-                else:
-                    self.pending.append(task)
-            else:
-                still.append(task)
-        self.running = still
+        if not len(self.running):
+            return
+        on_m = self.tt.machine[self.running] == machine
+        if not on_m.any():
+            return
+        ids = self.running[on_m]
+        roots = ids[self.tt.task_idx[ids] == 0]
+        others = ids[self.tt.task_idx[ids] != 0]
+        self.tt.requeue(ids)
+        if len(roots):
+            self.jt.root_machine[self.tt.job[roots]] = -1
+        self.pending_roots = np.concatenate([self.pending_roots, roots])
+        self.pending = np.concatenate([self.pending, others])
+        self.running = self.running[~on_m]
 
     def _retire(self, t: float) -> None:
-        still = []
-        for task in self.running:
-            if task.end_s <= t:
-                if task.machine not in self.dead:
-                    self.free_slots[task.machine] += 1
-                    self.task_counts[task.machine] -= 1
-                self.metrics.response_time_s.append(task.end_s - task.submit_s)
-            else:
-                still.append(task)
-        self.running = still
-        for rec in self.jobs.values():
-            if not rec.done and all(tk.end_s >= 0 and tk.end_s <= t for tk in rec.tasks):
-                rec.done = True
+        if len(self.running):
+            finished = self.tt.end_s[self.running] <= t
+            if finished.any():
+                ids = self.running[finished]  # running order == seed order
+                machines = self.tt.machine[ids]
+                alive = ~self.dead_mask[machines]
+                np.add.at(self.free_slots, machines[alive], 1)
+                np.subtract.at(self.task_counts, machines[alive], 1)
+                self.metrics.response_time_s.extend(
+                    (self.tt.end_s[ids] - self.tt.submit_s[ids]).tolist()
+                )
+                np.subtract.at(self.jt.unfinished, self.tt.job[ids], 1)
+                self.running = self.running[~finished]
+        # Sticky job-done marking: a job completes in the round its last
+        # task retires (the seed's all-tasks scan, as a counter).
+        jn = self.jt.n
+        if jn:
+            newly = (~self.jt.done[:jn]) & (self.jt.unfinished[:jn] == 0)
+            if newly.any():
+                self.jt.done[:jn] |= newly
 
-    def _start_task(self, task: TaskRec, machine: int, t: float, algo_s: float) -> None:
-        rec = self.jobs[task.job_id]
-        task.machine = machine
-        task.placed_s = t + algo_s
-        task.start_s = t + algo_s
-        task.end_s = task.start_s + rec.job.duration_s
-        self.free_slots[machine] -= 1
-        self.task_counts[machine] += 1
-        self.running.append(task)
-        self.metrics.tasks_placed += 1
-        self.metrics.placement_latency_s.append(task.placed_s - task.submit_s)
-        if task.task_idx == 0:
-            rec.root_machine = machine
+    def _start_batch(
+        self, ids: np.ndarray, machines: np.ndarray, t: float, algo_s: float
+    ) -> None:
+        """Vectorized `_start_task` over a batch (order = metric order)."""
+        if not len(ids):
+            return
+        jdense = self.tt.job[ids]
+        self.tt.start(ids, machines, t, algo_s, self.jt.duration_s[jdense])
+        np.subtract.at(self.free_slots, machines, 1)
+        np.add.at(self.task_counts, machines, 1)
+        self.running = np.concatenate([self.running, ids])
+        self.metrics.tasks_placed += len(ids)
+        self.metrics.placement_latency_s.extend(
+            (self.tt.placed_s[ids] - self.tt.submit_s[ids]).tolist()
+        )
+        is_root = self.tt.task_idx[ids] == 0
+        if is_root.any():
+            self.jt.root_machine[jdense[is_root]] = machines[is_root]
 
     def _round(self, t: float, migration_round: bool) -> None:
         cfg = self.cfg
 
         # Roots: immediate placement on any available machine (random).
-        for root in list(self.pending_roots):
-            free_m = np.nonzero(self.free_slots > 0)[0]
-            if len(free_m) == 0:
-                root.wait_s += cfg.round_interval_s
-                continue
-            m = int(self.rng.choice(free_m))
-            self.pending_roots.remove(root)
-            self._start_task(root, m, t, 0.0)
+        # Sequential on purpose: each placement consumes a slot and an RNG
+        # draw, exactly like the seed loop (roots are O(jobs), not O(tasks));
+        # the running-queue concatenate happens once for the whole round.
+        if len(self.pending_roots):
+            tt, jt = self.tt, self.jt
+            kept, placed = [], []
+            for rid in self.pending_roots:
+                free_m = np.nonzero(self.free_slots > 0)[0]
+                if len(free_m) == 0:
+                    tt.wait_s[rid] += cfg.round_interval_s
+                    kept.append(rid)
+                    continue
+                m = int(self.rng.choice(free_m))
+                j = tt.job[rid]
+                when = float(t)  # roots place with zero algorithm time
+                tt.machine[rid] = m
+                tt.placed_s[rid] = when
+                tt.start_s[rid] = when
+                tt.end_s[rid] = when + jt.duration_s[j]
+                jt.root_machine[j] = m
+                self.free_slots[m] -= 1
+                self.task_counts[m] += 1
+                placed.append(rid)
+                self.metrics.tasks_placed += 1
+                self.metrics.placement_latency_s.append(
+                    float(when - tt.submit_s[rid])
+                )
+            if placed:
+                self.running = np.concatenate(
+                    [self.running, np.asarray(placed, np.int64)]
+                )
+            self.pending_roots = (
+                np.asarray(kept, np.int64) if kept else EMPTY_IDS
+            )
 
         if cfg.policy == "random":
             self._round_baseline(t, random=True)
@@ -258,6 +369,11 @@ class Simulator:
             self._round_baseline(t, random=False)
         else:
             self._round_nomora(t, migration_round)
+
+    def _ready_prefix(self, limit: int):
+        """Queue positions/ids of pending tasks whose root is placed."""
+        ready_mask = self.jt.root_machine[self.tt.job[self.pending]] >= 0
+        return take_ready(self.pending, ready_mask, limit)
 
     def _baseline_costs(self, state: RoundState):
         """Fixed-cost (random) / task-count (load-spreading) matrices run
@@ -284,58 +400,78 @@ class Simulator:
         # Baselines schedule whatever is pending whose root is placed; the
         # random policy uses fixed costs (schedule if idle), load-spreading
         # balances task counts (paper §6.1).
-        ready = [
-            task
-            for task in self.pending
-            if self.jobs[task.job_id].root_machine >= 0
-        ][: self.cfg.max_round_tasks]
-        if not ready:
+        pos, ready_ids = self._ready_prefix(self.cfg.max_round_tasks)
+        if not len(ready_ids):
             return
         t0 = time.perf_counter()
         if random:
-            cols = random_placement(self.rng, len(ready), self.free_slots)
+            cols = random_placement(self.rng, len(ready_ids), self.free_slots)
         else:
             cols = load_spreading_placement(
-                self.task_counts, self.free_slots, len(ready)
+                self.task_counts, self.free_slots, len(ready_ids)
             )
-        algo_s = time.perf_counter() - t0
+        algo_s = self._algo_s(time.perf_counter() - t0)
         self.metrics.algo_runtime_s.append(algo_s)
         self.metrics.rounds += 1
-        for task, m in zip(ready, cols):
-            if m >= 0:
-                self.pending.remove(task)
-                self._start_task(task, int(m), t, algo_s)
+        placed = cols >= 0
+        if placed.any():
+            self._start_batch(ready_ids[placed], cols[placed], t, algo_s)
+            self.pending = drop_positions(self.pending, pos[placed])
 
     def _build_round_state(
-        self, ready: List[TaskRec], movers: List[TaskRec], t: float
+        self, ready_ids: np.ndarray, mover_ids: np.ndarray, t: float
     ) -> RoundState:
-        tasks = ready + movers
-        job_ids = sorted({task.job_id for task in tasks})
-        job_local = {j: i for i, j in enumerate(job_ids)}
-        root_machine = np.asarray(
-            [self.jobs[j].root_machine for j in job_ids], np.int64
-        )
+        tids = np.concatenate([ready_ids, mover_ids])
+        jdense = self.tt.job[tids]
+        jid_actual = self.jt.job_id[jdense]
+        # Round-local job ids, sorted by workload job_id (seed: sorted set).
+        uniq_dense = np.unique(jdense)
+        order = np.argsort(self.jt.job_id[uniq_dense], kind="stable")
+        job_dense_sorted = uniq_dense[order]
+        job_ids_sorted = self.jt.job_id[job_dense_sorted]
+        task_job = np.searchsorted(job_ids_sorted, jid_actual).astype(np.int64)
+        root_machine = self.jt.root_machine[job_dense_sorted].astype(np.int64)
         root_latency = np.stack(
             [self.plane.latency_from(int(m), int(t)) for m in root_machine]
         )
         free = self.free_slots.copy()
-        for task in movers:  # movers' slots are reclaimable within the round
-            free[task.machine] += 1
+        if len(mover_ids):  # movers' slots are reclaimable within the round
+            np.add.at(free, self.tt.machine[mover_ids], 1)
+        start = self.tt.start_s[tids]
         return RoundState(
-            task_job=np.asarray([job_local[task.job_id] for task in tasks], np.int64),
-            perf_idx=np.asarray(
-                [self.jobs[task.job_id].job.perf_idx for task in tasks], np.int64
-            ),
+            task_job=task_job,
+            perf_idx=self.jt.perf_idx[jdense].astype(np.int64),
             root_machine=root_machine,
             root_latency=root_latency,
-            wait_s=np.asarray([task.wait_s for task in tasks], np.float32),
-            run_s=np.asarray(
-                [max(0.0, t - task.start_s) if task.start_s >= 0 else 0.0 for task in tasks],
-                np.float32,
+            wait_s=self.tt.wait_s[tids].astype(np.float32),
+            run_s=np.where(start >= 0, np.maximum(0.0, t - start), 0.0).astype(
+                np.float32
             ),
-            cur_machine=np.asarray([task.machine for task in tasks], np.int64),
+            cur_machine=self.tt.machine[tids].astype(np.int64),
             free_slots=free,
         )
+
+    def _select_movers(self) -> np.ndarray:
+        """Running tasks eligible to migrate this round (seed order)."""
+        cfg = self.cfg
+        if not len(self.running):
+            return EMPTY_IDS
+        full = cfg.params.preemption
+        keep = self.tt.task_idx[self.running] != 0
+        # A mover is re-priced relative to its root's machine; a task whose
+        # root was lost to a machine failure has root_machine == -1, which
+        # would silently index latency_from(-1) as machine M-1. Hold such
+        # tasks until their root is re-placed.
+        keep &= self.jt.root_machine[self.tt.job[self.running]] >= 0
+        if self._straggler_jobs:
+            jid = self.jt.job_id[self.tt.job[self.running]]
+            keep &= np.isin(
+                jid, np.fromiter(self._straggler_jobs, np.int64, len(self._straggler_jobs))
+            )
+        elif not full:
+            keep &= False
+        # Bound the round size for tractability.
+        return self.running[keep][: min(cfg.max_round_tasks, 512)]
 
     def _round_nomora(self, t: float, migration_round: bool) -> None:
         cfg = self.cfg
@@ -343,33 +479,17 @@ class Simulator:
         # large backlog against a full cluster degenerates the auction into
         # unscheduled-price wars (Firmament likewise schedules what fits;
         # the remainder waits with escalating unscheduled cost).
-        admit = min(
-            cfg.max_round_tasks, int(self.free_slots.sum()) + 64
-        )
-        ready = [
-            task
-            for task in self.pending
-            if self.jobs[task.job_id].root_machine >= 0
-        ][:admit]
-        movers: List[TaskRec] = []
+        admit = min(cfg.max_round_tasks, int(self.free_slots.sum()) + 64)
+        pos, ready_ids = self._ready_prefix(admit)
+        mover_ids = EMPTY_IDS
         if migration_round:
-            full = cfg.params.preemption and True
-            movers = [
-                task
-                for task in self.running
-                if task.task_idx != 0
-                and (
-                    task.job_id in self._straggler_jobs
-                    or (full and not self._straggler_jobs)
-                )
-            ]
-            # Bound the round size for tractability.
-            movers = movers[: min(cfg.max_round_tasks, 512)]
+            mover_ids = self._select_movers()
             self._straggler_jobs.clear()
-        if not ready and not movers:
+        if not len(ready_ids) and not len(mover_ids):
             return
 
-        state = self._build_round_state(ready, movers, t)
+        state = self._build_round_state(ready_ids, mover_ids, t)
+        M = state.n_machines
         if cfg.policy in ("random_solver", "spread_solver"):
             w = self._baseline_costs(state)
             t0 = time.perf_counter()
@@ -381,20 +501,19 @@ class Simulator:
                 slots_per_machine=self.topo.slots_per_machine,
                 exact=False,
             )
-            algo_s = time.perf_counter() - t0
+            algo_s = self._algo_s(time.perf_counter() - t0)
             self.metrics.algo_runtime_s.append(algo_s)
             self.metrics.rounds += 1
-            M = state.n_machines
-            for task, col in zip(ready, res.assigned_col):
-                if 0 <= int(col) < M:
-                    self.pending.remove(task)
-                    self._start_task(task, int(col), t, algo_s)
+            rcols = np.asarray(res.assigned_col[: len(ready_ids)], np.int64)
+            placed = (rcols >= 0) & (rcols < M)
+            if placed.any():
+                self._start_batch(ready_ids[placed], rcols[placed], t, algo_s)
+                self.pending = drop_positions(self.pending, pos[placed])
             return
         costs = dense_costs(state, self.topo, cfg.params, self.lut)
 
         t0 = time.perf_counter()
         if cfg.solver == "auction":
-            M = state.n_machines
             res = auction.solve_transportation(
                 costs.w,
                 costs.col_capacity[:M],
@@ -413,66 +532,93 @@ class Simulator:
                 g.src, g.dst, g.cap, g.cost, g.source, g.sink, g.n_nodes
             )
             cols = flow_network.extract_assignment(g, fr.flow, state)
-        algo_s = time.perf_counter() - t0
+        algo_s = self._algo_s(time.perf_counter() - t0)
         self.metrics.algo_runtime_s.append(algo_s)
         self.metrics.rounds += 1
 
-        M = state.n_machines
-        tasks = ready + movers
-        n_running = len(movers)
+        cols = np.asarray(cols, np.int64)
+        n_ready = len(ready_ids)
+        rcols = cols[:n_ready]
+        placed = (rcols >= 0) & (rcols < M)
+        if placed.any():
+            self._start_batch(ready_ids[placed], rcols[placed], t, algo_s)
+            self.pending = drop_positions(self.pending, pos[placed])
+        # Unplaced ready tasks stay pending (unscheduled aggregator).
+
         n_migrated = 0
-        for task, col in zip(tasks, cols):
-            col = int(col)
-            if task in self.pending:
-                if 0 <= col < M:
-                    self.pending.remove(task)
-                    self._start_task(task, col, t, algo_s)
-                # else stays pending (unscheduled aggregator)
-            else:  # running mover
-                if 0 <= col < M and col != task.machine:
-                    # Migration: move without restart.
-                    self.free_slots[task.machine] += 1
-                    self.task_counts[task.machine] -= 1
-                    task.machine = col
-                    self.free_slots[col] -= 1
-                    self.task_counts[col] += 1
-                    n_migrated += 1
-                    self.metrics.tasks_migrated += 1
-                # col == unscheduled for a running task: keep it running
-                # (eviction-to-idle is never profitable under Eq. 10 costs).
-        if migration_round and n_running:
-            self.metrics.migrated_pct_per_round.append(100.0 * n_migrated / n_running)
+        if len(mover_ids):
+            mcols = cols[n_ready:]
+            cur = self.tt.machine[mover_ids]
+            mig = (mcols >= 0) & (mcols < M) & (mcols != cur)
+            # col == unscheduled for a running task: keep it running
+            # (eviction-to-idle is never profitable under Eq. 10 costs).
+            n_migrated = int(mig.sum())
+            if n_migrated:
+                # Migration: move without restart.
+                np.add.at(self.free_slots, cur[mig], 1)
+                np.subtract.at(self.task_counts, cur[mig], 1)
+                self.tt.machine[mover_ids[mig]] = mcols[mig]
+                np.subtract.at(self.free_slots, mcols[mig], 1)
+                np.add.at(self.task_counts, mcols[mig], 1)
+                self.metrics.tasks_migrated += n_migrated
+        if migration_round and len(mover_ids):
+            self.metrics.migrated_pct_per_round.append(
+                100.0 * n_migrated / len(mover_ids)
+            )
 
     # ------------------------------------------------------------------ #
 
     def _sample_perf(self, t: float) -> None:
-        roots, machines, jids, pidx = [], [], [], []
-        for rec in self.jobs.values():
-            if rec.done or rec.root_machine < 0:
-                continue
-            for task in rec.tasks:
-                if task.task_idx == 0 or task.machine < 0 or task.end_s <= t:
-                    continue
-                roots.append(rec.root_machine)
-                machines.append(task.machine)
-                jids.append(rec.job.job_id)
-                pidx.append(rec.job.perf_idx)
-        if not roots:
+        tt, jt = self.tt, self.jt
+        n = tt.n
+        if not n:
             return
-        lat = self.plane.latency_pairs(np.asarray(roots), np.asarray(machines), int(t))
+        jdense = tt.job[:n]
+        # Candidate mask over all tasks, in admission order — exactly the
+        # seed's jobs-dict iteration order, so per-job sample means see the
+        # same element order (float reductions match bit-for-bit).
+        mask = (
+            (~jt.done[jdense])
+            & (jt.root_machine[jdense] >= 0)
+            & (tt.task_idx[:n] != 0)
+            & (tt.machine[:n] >= 0)
+            & (tt.end_s[:n] > t)
+        )
+        if not mask.any():
+            return
+        ids = np.nonzero(mask)[0]
+        jd = jdense[ids]
+        roots = jt.root_machine[jd]
+        machines = tt.machine[ids]
+        jids = jt.job_id[jd]
+        pidx = jt.perf_idx[jd]
+        lat = self.plane.latency_pairs(roots, machines, int(t))
         step = np.clip(
             np.round(lat / perf_model.LUT_STEP_US), 0, perf_model.LUT_SIZE - 1
         ).astype(np.int64)
-        perf = self.lut_np[np.asarray(pidx), step]
-        jids = np.asarray(jids)
-        for j in np.unique(jids):
-            # Job-level sample: mean predicted performance over its tasks
-            # (normalised by the best achievable == 1.0 at same-machine RTT).
-            sample = float(perf[jids == j].mean())
-            self.metrics.record_perf_sample(int(j), sample)
-            if self.straggler is not None and self.straggler.observe(int(j), sample):
-                self._straggler_jobs.add(int(j))
-                self.straggler.clear(int(j))
+        perf = self.lut_np[pidx, step]
+        # Job-level sample: mean predicted performance over its tasks
+        # (normalised by the best achievable == 1.0 at same-machine RTT).
+        # When jids is non-decreasing (the common case: job_ids assigned in
+        # arrival order) each job's tasks form a contiguous run, and a slice
+        # mean over the run is bit-identical to the masked mean (same values,
+        # order, dtype) at O(T) instead of O(jobs * T).
+        if np.all(jids[1:] >= jids[:-1]):
+            uniq, starts = np.unique(jids, return_index=True)
+            bounds = np.append(starts, len(jids))
+            samples = [
+                (int(j), float(perf[bounds[k] : bounds[k + 1]].mean()))
+                for k, j in enumerate(uniq)
+            ]
+        else:
+            samples = [
+                (int(j), float(perf[jids == j].mean())) for j in np.unique(jids)
+            ]
+        for j, sample in samples:
+            self.metrics.record_perf_sample(j, sample)
+            if self.straggler is not None and self.straggler.observe(j, sample):
+                self._straggler_jobs.add(j)
+                self.straggler.clear(j)
 
 
 def simulate(

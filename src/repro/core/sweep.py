@@ -1,0 +1,197 @@
+"""Multi-scenario sweep runner: (policy x seed x scenario) grids.
+
+Runs the vectorized simulator over a full evaluation grid against one
+shared cluster: the topology and base `LatencyPlane` are built once and
+reused by every cell (scenarios that perturb latency derive a plane copy,
+cached per scenario), workloads are synthesized once per (seed, scenario)
+and reused across policies. This is the harness behind
+`benchmarks/sweep_bench.py` and `examples/sweep_cluster.py`, and the
+stepping stone toward Google-trace-size replays (ROADMAP "Open items"):
+cells are independent, so sharding the grid across processes/hosts only
+needs a partition of `SweepSpec.cells()`.
+
+Results serialise to JSON (`SweepResult.to_jsonable` / `save`) so runs at
+different scales or commits stay comparable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .latency import LatencyPlane
+from .scenarios import Scenario, get_scenario
+from .simulator import SimConfig, Simulator
+from .topology import Topology
+from .workload import Workload, synth_workload
+
+DEFAULT_POLICIES = ("random", "load_spreading", "nomora")
+
+
+def _scrub(x):
+    """NaN/inf -> None so saved sweeps are strict JSON."""
+    if isinstance(x, dict):
+        return {k: _scrub(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_scrub(v) for v in x]
+    if isinstance(x, float) and not math.isfinite(x):
+        return None
+    return x
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """One sweep grid: cluster shape + the (policy x seed x scenario) axes."""
+
+    n_machines: int = 256
+    machines_per_rack: int = 16
+    racks_per_pod: int = 4
+    slots_per_machine: int = 4
+    duration_s: int = 420
+    target_utilisation: float = 0.6
+    policies: Tuple[str, ...] = DEFAULT_POLICIES
+    seeds: Tuple[int, ...] = (0,)
+    scenarios: Tuple[str, ...] = ("baseline",)
+    plane_seed: int = 42
+    # Pin solver wall time in the metrics (0.0 => fully deterministic cells;
+    # None => measured, as in production replays).
+    fixed_algo_s: Optional[float] = None
+
+    def topology(self) -> Topology:
+        return Topology(
+            n_machines=self.n_machines,
+            machines_per_rack=self.machines_per_rack,
+            racks_per_pod=self.racks_per_pod,
+            slots_per_machine=self.slots_per_machine,
+        )
+
+    def cells(self) -> List[Tuple[str, int, str]]:
+        """Grid order: scenario-major, then seed, then policy — workloads
+        and planes are cached at the outer levels."""
+        return [
+            (scenario, seed, policy)
+            for scenario in self.scenarios
+            for seed in self.seeds
+            for policy in self.policies
+        ]
+
+
+@dataclasses.dataclass
+class SweepCell:
+    scenario: str
+    seed: int
+    policy: str
+    summary: Dict[str, float]
+    wall_s: float
+
+
+@dataclasses.dataclass
+class SweepResult:
+    spec: SweepSpec
+    cells: List[SweepCell]
+    wall_s: float = 0.0
+
+    def cell(self, scenario: str, seed: int, policy: str) -> SweepCell:
+        for c in self.cells:
+            if (c.scenario, c.seed, c.policy) == (scenario, seed, policy):
+                return c
+        raise KeyError((scenario, seed, policy))
+
+    def to_jsonable(self) -> Dict:
+        return _scrub(
+            {
+                "spec": dataclasses.asdict(self.spec),
+                "wall_s": self.wall_s,
+                "cells": [dataclasses.asdict(c) for c in self.cells],
+            }
+        )
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_jsonable(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    def table(self, metric: str = "avg_app_perf_area") -> str:
+        """Plain-text (scenario x policy) table of `metric`, seed-averaged."""
+        lines = [f"{'scenario':18s} " + " ".join(f"{p:>16s}" for p in self.spec.policies)]
+        for scenario in self.spec.scenarios:
+            vals = []
+            for policy in self.spec.policies:
+                per_seed = [
+                    c.summary.get(metric, float("nan"))
+                    for c in self.cells
+                    if c.scenario == scenario and c.policy == policy
+                ]
+                vals.append(sum(per_seed) / max(len(per_seed), 1))
+            lines.append(
+                f"{scenario:18s} " + " ".join(f"{v:16.2f}" for v in vals)
+            )
+        return "\n".join(lines)
+
+
+def _workload_for(
+    spec: SweepSpec, topo: Topology, scenario: Scenario, seed: int
+) -> Workload:
+    # Dict-literal merge: scenario overrides win (dict(k=..., **{...}) would
+    # raise on a duplicate key like target_utilisation).
+    kwargs = {
+        "target_utilisation": spec.target_utilisation,
+        **scenario.workload_kwargs,
+    }
+    return synth_workload(topo, duration_s=spec.duration_s, seed=seed, **kwargs)
+
+
+def run_sweep(
+    spec: SweepSpec,
+    *,
+    progress: Optional[Callable[[str], None]] = None,
+) -> SweepResult:
+    """Run every (scenario, seed, policy) cell of `spec` and collect
+    `SimMetrics.summary()` per cell. Topology and the base latency plane
+    are shared; scenario-derived planes and per-(scenario, seed) workloads
+    are each built once."""
+    say = progress or (lambda _msg: None)
+    topo = spec.topology()
+    base_plane = LatencyPlane.synthesize(
+        topo, duration_s=spec.duration_s, seed=spec.plane_seed
+    )
+    t_sweep = time.perf_counter()
+    cells: List[SweepCell] = []
+    for scenario_name in spec.scenarios:
+        scenario = get_scenario(scenario_name)
+        plane = scenario.plane(base_plane, spec.duration_s)
+        for seed in spec.seeds:
+            wl = _workload_for(spec, topo, scenario, seed)
+            cfg_kwargs = scenario.sim_config_kwargs(topo, spec.duration_s, seed)
+            for policy in spec.policies:
+                cfg = SimConfig(
+                    policy=policy,
+                    params=scenario.policy_params(),
+                    seed=seed,
+                    fixed_algo_s=spec.fixed_algo_s,
+                    **cfg_kwargs,
+                )
+                t0 = time.perf_counter()
+                metrics = Simulator(wl, plane, cfg).run()
+                wall = time.perf_counter() - t0
+                cells.append(
+                    SweepCell(
+                        scenario=scenario_name,
+                        seed=seed,
+                        policy=policy,
+                        summary=metrics.summary(),
+                        wall_s=wall,
+                    )
+                )
+                say(
+                    f"[sweep] {scenario_name}/{seed}/{policy}: "
+                    f"perf_area={cells[-1].summary['avg_app_perf_area']:.1f}% "
+                    f"placed={int(cells[-1].summary['tasks_placed'])} "
+                    f"({wall:.2f}s)"
+                )
+    return SweepResult(
+        spec=spec, cells=cells, wall_s=time.perf_counter() - t_sweep
+    )

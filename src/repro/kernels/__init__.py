@@ -15,3 +15,9 @@ Data-plane kernels (the scheduled workloads' hot spots):
   rwkv6_scan        - RWKV-6 data-dependent-decay linear recurrence
   rglru_scan        - RG-LRU gated linear recurrence (RecurrentGemma)
 """
+
+from jax.experimental.pallas import tpu as _pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both so the
+# kernels track the installed jax rather than one side of the rename.
+CompilerParams = getattr(_pltpu, "CompilerParams", None) or _pltpu.TPUCompilerParams

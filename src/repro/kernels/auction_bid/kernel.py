@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import CompilerParams
+
 NEG_INF = float(-(2.0**62))
 DEFAULT_BT = 256
 DEFAULT_BC = 512
@@ -104,7 +106,7 @@ def bid_top2_pallas(
             jax.ShapeDtypeStruct((T, 1), jnp.float32),
             jax.ShapeDtypeStruct((T, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")
         ),
         interpret=interpret,

@@ -5,6 +5,8 @@ import json
 import subprocess
 import sys
 
+import pytest
+
 _SNIPPET = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -53,6 +55,7 @@ print(json.dumps(out))
 """
 
 
+@pytest.mark.slow  # ~8 min: 4-device training subprocess
 def test_compressed_dp_converges_like_exact():
     proc = subprocess.run(
         [sys.executable, "-c", _SNIPPET],

@@ -17,28 +17,24 @@ from repro.core.policy import PolicyParams
 
 
 def test_spec_for_divisibility_fallback():
-    import jax
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_mesh
 
-    mesh = jax.make_mesh(
-        (1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    mesh = make_mesh((1,), ("model",))
     # 40 heads % 1 == 0 -> sharded onto a 1-sized axis is trivially fine.
     spec = shd.spec_for(("embed", "heads"), (64, 40), mesh, {"embed": None, "heads": ("model",)})
     assert spec == P(None, "model")
 
 
 def test_spec_for_no_axis_reuse():
-    import jax
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_mesh
 
-    mesh = jax.make_mesh(
-        (1, 1), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,) * 2
-    )
+    mesh = make_mesh((1, 1), ("data", "model"))
     rules = {"a": ("model",), "b": ("model",)}
     spec = shd.spec_for(("a", "b"), (4, 4), mesh, rules)
     # model axis must not be used twice
@@ -154,6 +150,7 @@ print(json.dumps({"max_err": err}))
 """
 
 
+@pytest.mark.slow  # ~8 min: multi-device shard_map subprocess
 def test_moe_shard_map_matches_pure_subprocess():
     """The shard_map group-local MoE dispatch must agree with the pure
     single-device path (dropless capacity so no routing nondeterminism)."""
@@ -194,6 +191,7 @@ print(json.dumps(out))
 """
 
 
+@pytest.mark.slow  # 512-forced-device subprocess; minutes under load on 1 core
 def test_small_mesh_dryrun_subprocess():
     """Lower train/decode/prefill on an 8-device host mesh in a subprocess
     (keeps this process single-device)."""

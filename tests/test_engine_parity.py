@@ -1,0 +1,152 @@
+"""Golden parity: vectorized SoA engine == seed per-object simulator.
+
+Every configuration runs both `simulator.Simulator` (vectorized) and
+`reference_sim.ReferenceSimulator` (the seed implementation, preserved
+verbatim) at a fixed seed with `fixed_algo_s=0.0` — pinning the one
+non-deterministic input (measured solver wall time) — and asserts the
+resulting `SimMetrics` are bit-identical: same counters, same metric
+series element-for-element (Python float equality, no tolerance), same
+per-job performance samples.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import latency, simulator, topology, workload
+from repro.core.policy import PolicyParams
+from repro.core.reference_sim import ReferenceSimulator
+
+TOPO = topology.Topology(
+    n_machines=48, machines_per_rack=8, racks_per_pod=3, slots_per_machine=4
+)
+
+
+@pytest.fixture(scope="module")
+def plane():
+    return latency.LatencyPlane.synthesize(TOPO, duration_s=200, seed=0)
+
+
+@pytest.fixture(scope="module")
+def wl():
+    return workload.synth_workload(TOPO, duration_s=200, seed=1, target_utilisation=0.4)
+
+
+def assert_metrics_identical(m_ref, m_vec):
+    assert m_ref.tasks_placed == m_vec.tasks_placed
+    assert m_ref.tasks_migrated == m_vec.tasks_migrated
+    assert m_ref.rounds == m_vec.rounds
+    # Element-for-element float equality: same values, same order.
+    assert m_ref.algo_runtime_s == m_vec.algo_runtime_s
+    assert m_ref.placement_latency_s == m_vec.placement_latency_s
+    assert m_ref.response_time_s == m_vec.response_time_s
+    assert m_ref.migrated_pct_per_round == m_vec.migrated_pct_per_round
+    assert m_ref.per_job_perf == m_vec.per_job_perf
+
+
+def run_both(wl, plane, **kw):
+    cfg = simulator.SimConfig(fixed_algo_s=0.0, **kw)
+    m_ref = ReferenceSimulator(wl, plane, dataclasses.replace(cfg)).run()
+    m_vec = simulator.Simulator(wl, plane, dataclasses.replace(cfg)).run()
+    return m_ref, m_vec
+
+
+@pytest.mark.parametrize(
+    "policy", ["random", "load_spreading", "nomora", "random_solver", "spread_solver"]
+)
+def test_parity_all_policies(wl, plane, policy):
+    m_ref, m_vec = run_both(wl, plane, policy=policy, seed=11)
+    assert m_vec.tasks_placed > 0
+    assert_metrics_identical(m_ref, m_vec)
+
+
+@pytest.mark.parametrize("beta_scale", [0.0, 100.0 / 3600.0])
+def test_parity_preemption(wl, plane, beta_scale):
+    m_ref, m_vec = run_both(
+        wl,
+        plane,
+        policy="nomora",
+        seed=12,
+        migration_interval_s=25,
+        params=PolicyParams(preemption=True, beta_scale=beta_scale),
+    )
+    assert_metrics_identical(m_ref, m_vec)
+
+
+def test_parity_preemption_off(wl, plane):
+    m_ref, m_vec = run_both(
+        wl, plane, policy="nomora", seed=13, params=PolicyParams(preemption=False)
+    )
+    assert_metrics_identical(m_ref, m_vec)
+
+
+def test_parity_machine_failures(wl, plane):
+    failures = ((40, 0), (40, 1), (90, 5))
+    m_ref, m_vec = run_both(
+        wl, plane, policy="nomora", seed=14, failures=failures
+    )
+    assert_metrics_identical(m_ref, m_vec)
+    # And under a baseline policy (different re-queue path).
+    m_ref, m_vec = run_both(
+        wl, plane, policy="random", seed=14, failures=failures
+    )
+    assert_metrics_identical(m_ref, m_vec)
+
+
+def test_parity_failures_with_preemption(wl, plane):
+    """Failure re-queue + migration rounds together: movers whose root
+    died are held back (identically) until the root is re-placed."""
+    m_ref, m_vec = run_both(
+        wl,
+        plane,
+        policy="nomora",
+        seed=18,
+        migration_interval_s=20,
+        failures=((35, 2), (35, 3), (80, 7)),
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+    )
+    assert_metrics_identical(m_ref, m_vec)
+
+
+def test_parity_straggler_migration(wl, plane):
+    m_ref, m_vec = run_both(
+        wl,
+        plane,
+        policy="nomora",
+        seed=15,
+        perf_sample_interval_s=10,
+        migration_interval_s=10_000,  # only straggler rounds migrate
+        straggler_threshold=0.99,
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+    )
+    assert_metrics_identical(m_ref, m_vec)
+
+
+def test_parity_mcmf_solver(plane):
+    small = workload.synth_workload(
+        TOPO, duration_s=60, seed=8, target_utilisation=0.1
+    )
+    m_ref, m_vec = run_both(small, plane, policy="nomora", solver="mcmf", seed=16)
+    assert_metrics_identical(m_ref, m_vec)
+
+
+def test_parity_task_state(wl, plane):
+    """Beyond metrics: the final per-task state (machine, times, waits)
+    matches the reference record-for-record."""
+    cfg = simulator.SimConfig(policy="nomora", seed=17, fixed_algo_s=0.0)
+    ref = ReferenceSimulator(wl, plane, dataclasses.replace(cfg))
+    ref.run()
+    vec = simulator.Simulator(wl, plane, dataclasses.replace(cfg))
+    vec.run()
+    jobs_vec = vec.jobs
+    assert set(ref.jobs) == set(jobs_vec)
+    for jid, rec_ref in ref.jobs.items():
+        rec_vec = jobs_vec[jid]
+        assert rec_ref.root_machine == rec_vec.root_machine
+        assert rec_ref.done == rec_vec.done
+        for t_ref, t_vec in zip(rec_ref.tasks, rec_vec.tasks):
+            assert dataclasses.asdict(t_ref) == dataclasses.asdict(t_vec)
+    assert np.array_equal(ref.free_slots, vec.free_slots)
+    assert np.array_equal(ref.task_counts, vec.task_counts)
+    assert ref.dead == vec.dead

@@ -1,0 +1,151 @@
+"""Property/invariant tests for slot accounting in the vectorized engine.
+
+Seeded randomized properties (no hypothesis dependency, so they run on a
+clean environment): every scheduling round of every configuration must
+keep machine slot accounting exact — `free_slots` within [0,
+slots_per_machine], free + running == capacity on alive machines, zero
+capacity and zero residents on dead machines, and `task_counts` equal to
+the actual resident counts. Placement policies must never exceed
+capacity, and a failure re-queue followed by retirement must not
+double-free slots.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import latency, simulator, topology, workload
+from repro.core.engine import TaskTable
+from repro.core.policy import (
+    PolicyParams,
+    load_spreading_placement,
+    random_placement,
+)
+
+TOPO = topology.Topology(
+    n_machines=32, machines_per_rack=8, racks_per_pod=2, slots_per_machine=3
+)
+
+
+class CheckedSimulator(simulator.Simulator):
+    """Simulator that re-verifies slot accounting after every mutation."""
+
+    checks = 0
+
+    def _invariants(self):
+        M = self.topo.n_machines
+        spm = self.topo.slots_per_machine
+        assert self.free_slots.min() >= 0, "free_slots went negative"
+        assert self.free_slots.max() <= spm, "free_slots exceeds capacity"
+        if len(self.running):
+            machines = self.tt.machine[self.running]
+            assert machines.min() >= 0, "running task without a machine"
+            resident = np.bincount(machines, minlength=M)
+        else:
+            resident = np.zeros(M, np.int64)
+        alive = ~self.dead_mask
+        assert (
+            self.free_slots[alive] + resident[alive] == spm
+        ).all(), "slot leak on alive machine (double-free or lost slot)"
+        assert (resident[~alive] == 0).all(), "running task on dead machine"
+        assert (self.free_slots[~alive] == 0).all(), "dead machine has capacity"
+        assert (self.task_counts[alive] == resident[alive]).all()
+        assert (self.task_counts[~alive] == 0).all()
+        type(self).checks += 1
+
+    def _retire(self, t):
+        super()._retire(t)
+        self._invariants()
+
+    def _fail_machine(self, machine, t):
+        super()._fail_machine(machine, t)
+        self._invariants()
+
+    def _round(self, t, migration_round):
+        super()._round(t, migration_round)
+        self._invariants()
+
+
+def _run_checked(seed, **kw):
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=150, seed=seed)
+    wl = workload.synth_workload(
+        TOPO, duration_s=150, seed=seed + 1, target_utilisation=0.7
+    )
+    cfg = simulator.SimConfig(seed=seed, fixed_algo_s=0.0, **kw)
+    sim = CheckedSimulator(wl, plane, cfg)
+    m = sim.run()
+    assert m.tasks_placed > 0
+    return sim
+
+
+@pytest.mark.parametrize("policy", ["random", "load_spreading", "nomora"])
+@pytest.mark.parametrize("seed", [0, 7])
+def test_slot_invariants_every_round(policy, seed):
+    CheckedSimulator.checks = 0
+    _run_checked(seed, policy=policy)
+    assert CheckedSimulator.checks > 100  # the hooks actually ran
+
+
+def test_slot_invariants_under_failures_and_preemption():
+    # Failure re-queue then retire must not double-free: the failed
+    # machine's slots are zeroed, its tasks re-queue, and their eventual
+    # retirement must not credit any machine beyond capacity.
+    sim = _run_checked(
+        3,
+        policy="nomora",
+        failures=((30, 0), (30, 1), (70, 2), (70, 0)),  # incl. double-fail
+        migration_interval_s=20,
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+    )
+    assert sim.dead == {0, 1, 2}
+    assert (sim.free_slots[[0, 1, 2]] == 0).all()
+
+
+def test_failure_requeue_tasks_rescheduled_elsewhere():
+    sim = _run_checked(5, policy="random", failures=((40, 4),))
+    for rec in sim.jobs.values():
+        for task in rec.tasks:
+            if task.machine >= 0:
+                assert task.machine != 4
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_random_placement_never_exceeds_capacity(seed):
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(2, 40))
+    free = rng.integers(0, 5, size=M)
+    n_tasks = int(rng.integers(1, 80))
+    cols = random_placement(np.random.default_rng(seed + 1), n_tasks, free)
+    placed = cols[cols >= 0]
+    counts = np.bincount(placed, minlength=M)
+    assert (counts <= free).all()
+    # Either every task placed or the cluster is exactly full.
+    assert len(placed) == min(n_tasks, int(free.sum()))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_load_spreading_never_exceeds_capacity(seed):
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(2, 40))
+    free = rng.integers(0, 5, size=M)
+    task_counts = rng.integers(0, 10, size=M)
+    n_tasks = int(rng.integers(1, 80))
+    cols = load_spreading_placement(task_counts, free, n_tasks)
+    placed = cols[cols >= 0]
+    counts = np.bincount(placed, minlength=M)
+    assert (counts <= free).all()
+    assert len(placed) == min(n_tasks, int(free.sum()))
+
+
+def test_task_table_capacity_and_requeue():
+    tt = TaskTable(capacity=5)
+    ids = tt.append_job(0, 3, 1.5)
+    assert ids.tolist() == [0, 1, 2]
+    assert tt.task_idx[:3].tolist() == [0, 1, 2]
+    assert (tt.submit_s[:3] == 1.5).all()
+    tt.start(ids, np.asarray([4, 4, 2]), 2.0, 0.5, np.asarray([10.0, 10.0, 10.0]))
+    assert (tt.end_s[:3] == 12.5).all()
+    tt.requeue(ids[:1])
+    assert tt.machine[0] == -1 and tt.end_s[0] == -1.0 and tt.wait_s[0] == 0.0
+    assert tt.machine[1] == 4  # others untouched
+    with pytest.raises(ValueError):
+        tt.append_job(1, 3, 0.0)  # 3 + 3 > 5

@@ -6,6 +6,8 @@ import json
 import subprocess
 import sys
 
+import pytest
+
 _SNIPPET = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
@@ -40,6 +42,7 @@ print(json.dumps({"serial": serial, "pp": pp, "gnorm": gnorm}))
 """
 
 
+@pytest.mark.slow  # ~8 min: multi-device pipeline subprocess
 def test_pp_loss_matches_serial():
     proc = subprocess.run(
         [sys.executable, "-c", _SNIPPET],

@@ -1,6 +1,9 @@
 """Extra hypothesis property tests across the scheduler stack."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

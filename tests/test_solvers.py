@@ -4,6 +4,8 @@ DESIGN.md §5.1 collapse (explicit Quincy graph == dense transportation)."""
 import networkx as nx
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
