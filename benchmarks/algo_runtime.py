@@ -14,8 +14,10 @@ from . import common
 def run():
     rows = []
     med = {}
+    # nomora_host is the same cost model through the numpy reference
+    # backend: its row is the fused-vs-host solver-runtime comparison.
     for name in ("random_solver", "spread_solver", "nomora_105_110",
-                 "nomora_110_115", "nomora_preempt"):
+                 "nomora_host", "nomora_110_115", "nomora_preempt"):
         m = common.run_policy(name)
         s = m.summary()
         med[name] = s["algo_runtime_s_p50"]

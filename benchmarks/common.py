@@ -55,6 +55,12 @@ POLICY_CONFIGS = {
     "nomora_105_110": dict(
         policy="nomora", params=PolicyParams(p_m=105, p_r=110)
     ),
+    # Same cost model through the numpy host reference backend — for
+    # side-by-side fused-vs-host timings (scheduler_backend.BACKEND_NAMES).
+    "nomora_host": dict(
+        policy="nomora", backend="auction_host",
+        params=PolicyParams(p_m=105, p_r=110),
+    ),
     "nomora_110_115": dict(
         policy="nomora", params=PolicyParams(p_m=110, p_r=115)
     ),

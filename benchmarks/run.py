@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures covered:
   Fig. 8  placement_latency  - submission -> placement latency
   Fig. 9  response_time      - submission -> completion
   (extra) sweep_bench        - SoA engine speedup + multi-scenario sweep
+  (extra) round_pipeline     - host-numpy vs fused on-device round
   (extra) kernel_bench       - scheduler kernel microbenchmarks
 
 REPRO_BENCH_SCALE={small,medium,paper} controls simulation size.
@@ -28,6 +29,7 @@ def main() -> None:
         placement_latency,
         placement_quality,
         response_time,
+        round_pipeline,
         sweep_bench,
     )
 
@@ -39,6 +41,7 @@ def main() -> None:
         ("placement_latency", placement_latency),
         ("response_time", response_time),
         ("sweep_bench", sweep_bench),
+        ("round_pipeline", round_pipeline),
         ("kernel_bench", kernel_bench),
     ]
     print("name,us_per_call,derived")

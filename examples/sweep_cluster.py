@@ -9,8 +9,10 @@ perturbations derive cached copies.
 
 Run:  PYTHONPATH=src python examples/sweep_cluster.py
 Optionally save the full JSON:  ... sweep_cluster.py /tmp/sweep.json
+Shard the grid across processes:  REPRO_SWEEP_WORKERS=4 ... sweep_cluster.py
 """
 
+import os
 import sys
 
 from repro.core.scenarios import SCENARIOS
@@ -31,7 +33,8 @@ def main() -> None:
     print(f"=== sweep: {n} cells on {spec.n_machines} machines ===")
     for name, s in SCENARIOS.items():
         print(f"  {name:18s} {s.description}")
-    result = run_sweep(spec, progress=print)
+    workers = int(os.environ.get("REPRO_SWEEP_WORKERS", "1"))
+    result = run_sweep(spec, progress=print, workers=workers)
     print()
     print("average application performance area (%, higher is better):")
     print(result.table("avg_app_perf_area"))

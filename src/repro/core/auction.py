@@ -200,12 +200,8 @@ def solve_transportation(
     T, C = w.shape
     if tie_jitter > 0 and T > 0:
         M_ = n_machines
-        tt = np.arange(T, dtype=np.uint64)[:, None]
-        mm = np.arange(M_, dtype=np.uint64)[None, :]
-        h = (tt * np.uint64(0x9E3779B97F4A7C15) + mm * np.uint64(0xBF58476D1CE4E5B9))
-        h ^= h >> np.uint64(29)
         w = w.copy()
-        jit = (h % np.uint64(tie_jitter)).astype(np.int64)
+        jit = _jitter_matrix_np(T, M_, tie_jitter).astype(np.int64)
         mcols = w[:, :M_]
         w[:, :M_] = np.where(mcols < int(INF_COST), mcols + jit, mcols)
     M = n_machines
@@ -276,4 +272,176 @@ def solve_transportation(
         total_cost=int(costs.sum()),
         iterations=total_iters,
         prices=np.asarray(price),
+    )
+
+
+# --- Fully on-device round: cost arrays in, assignment out ------------------
+
+
+def _jitter_matrix_np(n_rows: int, n_cols: int, tie_jitter: int) -> np.ndarray:
+    """Deterministic per-(task, machine) tie jitter in [0, tie_jitter).
+
+    The single source of truth for both solve paths — host rounds apply it
+    directly, device rounds upload it once per bucket shape — so host and
+    device rounds place identically bit for bit.
+    """
+    tt = np.arange(n_rows, dtype=np.uint64)[:, None]
+    mm = np.arange(n_cols, dtype=np.uint64)[None, :]
+    h = tt * np.uint64(0x9E3779B97F4A7C15) + mm * np.uint64(0xBF58476D1CE4E5B9)
+    h ^= h >> np.uint64(29)
+    return (h % np.uint64(tie_jitter)).astype(np.int32)
+
+
+@functools.lru_cache(maxsize=8)
+def _jitter_device(n_rows: int, n_cols: int, tie_jitter: int) -> jnp.ndarray:
+    """Device-resident jitter matrix, cached per padded round shape.
+
+    Depends only on the (bucketed) shape, so across a replay this is one
+    host->device upload per bucket, not per round — the per-round traffic
+    of the fused pipeline stays O(T + J*M) inputs and O(T) outputs, never
+    the (T, M) cost matrix.
+    """
+    if tie_jitter <= 0:
+        return jnp.zeros((n_rows, n_cols), jnp.int32)
+    return jnp.asarray(_jitter_matrix_np(n_rows, n_cols, tie_jitter))
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "n_slots"))
+def _prepare_device(
+    w_m,  # (Tp, M) i32 machine costs (INF_COST = no arc)
+    a,  # (Tp,) i32 unscheduled costs
+    jit_m,  # (Tp, M) i32 tie jitter
+    active,  # (Tp,) bool
+    capacity,  # (M,) i32 free slots
+    scale: int,
+    n_slots: int,
+):
+    finite = w_m < INF_COST
+    wj = jnp.where(finite, w_m + jit_m, w_m)  # int32; bound-checked by caller
+    vm = jnp.where(
+        jnp.logical_and(finite, active[:, None]),
+        (-(wj * scale)).astype(jnp.float32),
+        NEG_VALUE,
+    )
+    vu = jnp.where(active, (-(a * scale)).astype(jnp.float32), jnp.float32(0.0))
+    slot_iota = jax.lax.broadcasted_iota(
+        jnp.int32, (capacity.shape[0], n_slots), 1
+    )
+    price0 = jnp.where(slot_iota >= capacity[:, None], PRICE_LOCK, 0.0).astype(
+        jnp.float32
+    )
+    return vm, vu, price0, wj
+
+
+@jax.jit
+def _assignment_cost(wj, a, assigned, active):
+    """Per-task chosen arc cost (jittered machine cols / unsched), (Tp,) i32.
+
+    Returned unsummed: the host accumulates in int64 (the device has no
+    x64, and an on-device int32 sum could wrap for huge unscheduled costs
+    that individually still pass the float32-exactness guard).
+    """
+    M = wj.shape[1]
+    rows = jnp.arange(wj.shape[0])
+    mcost = wj[rows, jnp.clip(assigned, 0, M - 1)]
+    per_task = jnp.where(assigned < M, mcost, a)
+    return jnp.where(active, per_task, 0)
+
+
+def solve_transportation_device(
+    w_m: jnp.ndarray,  # (Tp, M) i32 device machine costs, rows >= n_tasks junk
+    a: jnp.ndarray,  # (Tp,) i32 device unscheduled costs
+    n_tasks: int,  # actual task count T <= Tp
+    machine_capacity: np.ndarray,  # (M,) host slots per machine
+    n_machines: int,
+    task_job: np.ndarray,  # (T,) host round-local job index
+    *,
+    slots_per_machine: int | None = None,
+    eps: float = 1.0,
+    max_iters_per_phase: int = 500_000,
+    tie_jitter: int = 0,
+    exact: bool = True,
+    cost_bound: int | None = None,
+) -> AuctionResult:
+    """`solve_transportation` on pre-built device cost arrays.
+
+    The (Tp, M) machine-cost matrix enters and stays on device: jitter,
+    value scaling, and slot prices are one jitted prep, then the same
+    `_auction_phase` the host path runs. Only O(T) results (assignment,
+    iteration count, total cost) come back to host; identical inputs give
+    bit-identical assignments to the host path because the phase consumes
+    bit-identical float32 values.
+
+    ``cost_bound`` is a host-known upper bound on any finite cost
+    (pre-jitter); pass it to keep the float32-exactness check free of a
+    device sync. NoMora machine costs are <= 10000 by construction
+    (perf is clipped to >= 1e-2), so callers only need to bound the
+    unscheduled column.
+    """
+    T = n_tasks
+    M = n_machines
+    Tp = int(w_m.shape[0])
+    S = int(slots_per_machine or max(1, int(np.max(machine_capacity, initial=1))))
+    if T == 0:
+        return AuctionResult(
+            assigned_col=np.zeros((0,), np.int64),
+            total_cost=0,
+            iterations=0,
+            prices=np.zeros((M, S), np.float32),
+        )
+    scale = (T + 1) if exact else 1
+    if cost_bound is None:
+        finite = np.asarray(w_m[:T] < INF_COST)
+        cost_bound = int(
+            max(
+                np.max(np.where(finite, np.asarray(w_m[:T]), 0), initial=1),
+                np.max(np.asarray(a[:T])),
+            )
+        )
+    if (cost_bound + max(tie_jitter - 1, 0)) * scale * 4 >= _F32_EXACT:
+        raise ValueError(
+            f"scaled costs exceed float32-exact range: "
+            f"{cost_bound} * {scale} * 4 >= 2^24"
+        )
+
+    jobcol_p = np.full((Tp,), M, np.int32)
+    jobcol_p[:T] = M + task_job
+    active = np.zeros((Tp,), bool)
+    active[:T] = True
+    active_dev = jnp.asarray(active)
+
+    vm, vu, price0, wj = _prepare_device(
+        w_m,
+        a,
+        _jitter_device(Tp, M, tie_jitter),
+        active_dev,
+        jnp.asarray(machine_capacity.astype(np.int32)),
+        scale,
+        S,
+    )
+    price, _, assigned, iters = _auction_phase(
+        price0,
+        vm,
+        vu,
+        jnp.asarray(jobcol_p),
+        active_dev,
+        jnp.float32(eps),
+        max_iters_per_phase,
+    )
+    total_iters = int(iters)
+    if total_iters >= max_iters_per_phase:
+        raise RuntimeError(f"auction hit the iteration cap ({max_iters_per_phase})")
+    assigned_np = np.asarray(assigned)[:T]
+    if (assigned_np < 0).any():
+        raise RuntimeError("auction did not converge: unassigned tasks remain")
+    total_cost = int(
+        np.asarray(_assignment_cost(wj, a, assigned, active_dev))
+        .astype(np.int64)
+        .sum()
+    )
+    return AuctionResult(
+        assigned_col=assigned_np.astype(np.int64),
+        total_cost=total_cost,
+        iterations=total_iters,
+        prices=price,  # left on device; host pulls via np.asarray on demand
     )

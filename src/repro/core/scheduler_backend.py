@@ -1,0 +1,360 @@
+"""Pluggable per-round placement engines behind one `SchedulerBackend` API.
+
+The simulator's round used to branch on (policy string x solver string)
+across three code paths; every strategy is now a backend with one entry
+point:
+
+    backend.place(state: RoundState, ctx: RoundContext) -> Placement
+
+`Placement.cols` assigns every round task a column — a machine id in
+[0, M), >= M for "stay unscheduled", or -1 for "no decision" — and
+`Placement.algo_s` is the backend-measured solver wall time, excluding
+cost-model construction on every backend (the fused ``auction`` backend
+syncs its device cost arrays before starting the clock), matching the
+paper's Fig. 6 "algorithm runtime" and the pre-refactor measurement
+points.
+
+Backends:
+
+- `AuctionBackend` (name ``auction``) — the production path: fused
+  on-device cost build (`policy.device_round_costs`, task/job dims padded
+  to power-of-two buckets so the pipeline compiles once per bucket) into
+  `auction.solve_transportation_device`; the (T, M) cost matrix never
+  crosses the host↔device boundary. ``auction_host`` is the same solver
+  through the numpy `dense_costs` reference — kept as the parity oracle,
+  bit-identical placements (tests/test_policy_device.py).
+- `MCMFBackend` (``mcmf``) — the paper-faithful Quincy graph through the
+  SSP min-cost-max-flow reference solver.
+- `RandomBackend` / `LoadSpreadingBackend` (``random``/``load_spreading``)
+  — the paper §6.1 heuristics; no cost model, no latency plane reads.
+- `RandomSolverBackend` / `SpreadSolverBackend` — Firmament-style
+  baselines: fixed/load-derived costs through the auction engine.
+
+`make_backend` maps a `SimConfig` (or an explicit ``cfg.backend`` name) to
+an instance; `core/sweep.py` exposes the same names per grid cell via the
+``policy:backend`` cell syntax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from . import auction, flow_network, mcmf, perf_model
+from .policy import (
+    INF_COST,
+    PolicyParams,
+    RoundState,
+    dense_costs,
+    device_round_costs,
+    load_spreading_placement,
+    random_placement,
+)
+from .topology import Topology
+
+# NoMora machine-arc costs are bounded by construction: perf is clipped to
+# >= 1e-2, so cost = round(10/p)*10 <= 10000 (see perf_model.perf_to_cost).
+_MAX_MACHINE_COST = 10_000
+
+
+@dataclasses.dataclass
+class RoundContext:
+    """Simulator-side inputs a backend may need beyond the RoundState."""
+
+    rng: np.random.Generator  # shared simulator stream (random baselines)
+    task_counts: np.ndarray  # (M,) running tasks per machine (spreading)
+    n_ready: int  # state's first n_ready tasks are pending; the rest migrate
+
+
+@dataclasses.dataclass
+class Placement:
+    """One round's decision: column per task + the measured solver time."""
+
+    cols: np.ndarray  # (T,) machine id, >= M unscheduled, -1 no decision
+    algo_s: float
+    objective: Optional[int] = None  # solver objective (cost-model backends)
+
+
+class SchedulerBackend:
+    """Strategy interface for one scheduling round."""
+
+    name: str = "abstract"
+    #: Whether RoundState.root_latency must be populated (cost-model paths).
+    needs_latency: bool = True
+    #: Whether round admission is capped at free slots + slack (solver
+    #: paths; a big backlog against a full cluster degenerates the auction
+    #: into unscheduled-price wars).
+    caps_admission: bool = True
+    #: Whether the backend can re-place running tasks (preemption arcs):
+    #: gates periodic migration rounds and the application of mover columns.
+    supports_migration: bool = False
+    #: Whether straggler/migration rounds feed movers into this backend's
+    #: RoundState at all. Solver baselines select movers (their presence
+    #: changes the solve and, for random costs, the rng stream — seed
+    #: semantics) even though their mover columns are never applied.
+    selects_movers: bool = False
+
+    def place(self, state: RoundState, ctx: RoundContext) -> Placement:
+        raise NotImplementedError
+
+
+class RandomBackend(SchedulerBackend):
+    name = "random"
+    needs_latency = False
+    caps_admission = False
+
+    def place(self, state: RoundState, ctx: RoundContext) -> Placement:
+        t0 = time.perf_counter()
+        cols = random_placement(ctx.rng, state.n_tasks, state.free_slots)
+        return Placement(cols=cols, algo_s=time.perf_counter() - t0)
+
+
+class LoadSpreadingBackend(SchedulerBackend):
+    name = "load_spreading"
+    needs_latency = False
+    caps_admission = False
+
+    def place(self, state: RoundState, ctx: RoundContext) -> Placement:
+        t0 = time.perf_counter()
+        cols = load_spreading_placement(
+            ctx.task_counts, state.free_slots, state.n_tasks
+        )
+        return Placement(cols=cols, algo_s=time.perf_counter() - t0)
+
+
+class _SolverBaselineBackend(SchedulerBackend):
+    """Fixed-cost (random) / task-count (load-spreading) matrices run
+    through the same auction engine, mirroring Firmament baseline policies
+    (the paper's Fig. 6 compares *solver* runtimes across policies)."""
+
+    needs_latency = False
+    selects_movers = True  # movers enter the solve; columns never applied
+
+    def __init__(self, params: PolicyParams, topo: Topology):
+        self.params = params
+        self.topo = topo
+
+    def _machine_costs(self, state: RoundState, ctx: RoundContext) -> np.ndarray:
+        raise NotImplementedError
+
+    def place(self, state: RoundState, ctx: RoundContext) -> Placement:
+        T, J, M = state.n_tasks, state.n_jobs, state.n_machines
+        w = np.full((T, M + J), int(INF_COST), np.int64)
+        w[:, :M] = self._machine_costs(state, ctx)
+        a = (self.params.omega * state.wait_s + self.params.gamma).astype(
+            np.int64
+        )
+        w[np.arange(T), M + state.task_job] = a
+        t0 = time.perf_counter()
+        res = auction.solve_transportation(
+            w,
+            state.free_slots.astype(np.int64),
+            M,
+            M + state.task_job.astype(np.int64),
+            slots_per_machine=self.topo.slots_per_machine,
+            exact=False,
+        )
+        return Placement(
+            cols=np.asarray(res.assigned_col, np.int64),
+            algo_s=time.perf_counter() - t0,
+            objective=res.total_cost,
+        )
+
+
+class RandomSolverBackend(_SolverBaselineBackend):
+    name = "random_solver"
+
+    def _machine_costs(self, state: RoundState, ctx: RoundContext) -> np.ndarray:
+        # Fixed cost + random tie-break jitter (a flat matrix makes any
+        # assignment optimal; jitter picks one uniformly and keeps the
+        # auction free of degenerate price wars).
+        return 100 + ctx.rng.integers(
+            0, 10, size=(state.n_tasks, state.n_machines)
+        ).astype(np.int64)
+
+
+class SpreadSolverBackend(_SolverBaselineBackend):
+    name = "spread_solver"
+
+    def _machine_costs(self, state: RoundState, ctx: RoundContext) -> np.ndarray:
+        return 100 + np.broadcast_to(
+            ctx.task_counts[None, :], (state.n_tasks, state.n_machines)
+        ).astype(np.int64)
+
+
+class AuctionBackend(SchedulerBackend):
+    """NoMora cost model + auction solver (device-fused or host-reference).
+
+    ``device=True`` (the default, name ``auction``) runs the entire round —
+    costmap, rack reduce, thresholds, preemption discount, value scaling,
+    auction — as jitted device programs; padding both varying dims to
+    power-of-two buckets bounds recompilation across rounds. ``device=False``
+    (name ``auction_host``) is the pre-refactor numpy `dense_costs` +
+    `solve_transportation` path; both produce bit-identical placements, so
+    either satisfies the engine-parity suite.
+    """
+
+    supports_migration = True
+    selects_movers = True
+
+    def __init__(
+        self,
+        params: PolicyParams,
+        topo: Topology,
+        lut_table=None,
+        *,
+        device: bool = True,
+        tie_jitter: int = 9,
+        exact: bool = False,
+        use_pallas: Optional[bool] = None,
+        interpret: bool = False,
+    ):
+        self.params = params
+        self.topo = topo
+        self.lut = perf_model.perf_lut_table() if lut_table is None else lut_table
+        self.device = device
+        self.tie_jitter = tie_jitter
+        self.exact = exact
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.name = "auction" if device else "auction_host"
+
+    def place(self, state: RoundState, ctx: RoundContext) -> Placement:
+        if not self.device:
+            costs = dense_costs(state, self.topo, self.params, self.lut)
+            M = state.n_machines
+            t0 = time.perf_counter()
+            res = auction.solve_transportation(
+                costs.w,
+                costs.col_capacity[:M],
+                M,
+                M + state.task_job.astype(np.int64),
+                slots_per_machine=self.topo.slots_per_machine,
+                tie_jitter=self.tie_jitter,
+                exact=self.exact,
+            )
+            return Placement(
+                cols=np.asarray(res.assigned_col, np.int64),
+                algo_s=time.perf_counter() - t0,
+                objective=res.total_cost,
+            )
+
+        # Fused device round. Syncing the cost arrays before starting the
+        # solver clock keeps algo_s solve-only — comparable with every
+        # host-side backend and the paper's Fig. 6 measurement points; the
+        # arrays stay device-resident (block_until_ready transfers nothing).
+        w_m, a, _, _, _ = device_round_costs(
+            state,
+            self.topo,
+            self.params,
+            self.lut,
+            n_pad_tasks=auction._bucket(state.n_tasks),
+            n_pad_jobs=auction._bucket(state.n_jobs, 8),
+            use_pallas=self.use_pallas,
+            interpret=self.interpret,
+        )
+        jax.block_until_ready((w_m, a))
+        t0 = time.perf_counter()
+        # Host-side cost bound: machine arcs are <= 10000 by construction,
+        # the unscheduled column is known from the (host) wait times.
+        a_max = int(self.params.omega * float(state.wait_s.max(initial=0.0))
+                    + self.params.gamma) + 1
+        res = auction.solve_transportation_device(
+            w_m,
+            a,
+            state.n_tasks,
+            state.free_slots,
+            state.n_machines,
+            state.task_job,
+            slots_per_machine=self.topo.slots_per_machine,
+            tie_jitter=self.tie_jitter,
+            exact=self.exact,
+            cost_bound=max(_MAX_MACHINE_COST, a_max),
+        )
+        return Placement(
+            cols=np.asarray(res.assigned_col, np.int64),
+            algo_s=time.perf_counter() - t0,
+            objective=res.total_cost,
+        )
+
+
+class MCMFBackend(SchedulerBackend):
+    """Paper-faithful Quincy flow network + SSP MCMF (the oracle solver)."""
+
+    name = "mcmf"
+    supports_migration = True
+    selects_movers = True
+
+    def __init__(self, params: PolicyParams, topo: Topology, lut_table=None):
+        self.params = params
+        self.topo = topo
+        self.lut = perf_model.perf_lut_table() if lut_table is None else lut_table
+
+    def place(self, state: RoundState, ctx: RoundContext) -> Placement:
+        costs = dense_costs(state, self.topo, self.params, self.lut)
+        t0 = time.perf_counter()
+        g = flow_network.build_flow_graph(state, self.topo, self.params, costs)
+        fr = mcmf.min_cost_max_flow(
+            g.src, g.dst, g.cap, g.cost, g.source, g.sink, g.n_nodes
+        )
+        cols = flow_network.extract_assignment(g, fr.flow, state)
+        return Placement(
+            cols=np.asarray(cols, np.int64),
+            algo_s=time.perf_counter() - t0,
+            objective=int(fr.total_cost),
+        )
+
+
+BACKEND_NAMES = (
+    "auction",
+    "auction_host",
+    "mcmf",
+    "random",
+    "load_spreading",
+    "random_solver",
+    "spread_solver",
+)
+
+
+def make_backend(
+    name: str,
+    params: PolicyParams,
+    topo: Topology,
+    lut_table=None,
+) -> SchedulerBackend:
+    """Instantiate a backend by name (see BACKEND_NAMES)."""
+    if name == "random":
+        return RandomBackend()
+    if name == "load_spreading":
+        return LoadSpreadingBackend()
+    if name == "random_solver":
+        return RandomSolverBackend(params, topo)
+    if name == "spread_solver":
+        return SpreadSolverBackend(params, topo)
+    if name == "auction":
+        return AuctionBackend(params, topo, lut_table, device=True)
+    if name == "auction_host":
+        return AuctionBackend(params, topo, lut_table, device=False)
+    if name == "mcmf":
+        return MCMFBackend(params, topo, lut_table)
+    raise KeyError(f"unknown scheduler backend {name!r}; one of {BACKEND_NAMES}")
+
+
+def backend_for_config(cfg, topo: Topology, lut_table=None) -> SchedulerBackend:
+    """Resolve a SimConfig to a backend: explicit ``cfg.backend`` wins,
+    otherwise the legacy (policy, solver) pair maps onto a name."""
+    if getattr(cfg, "backend", None):
+        name = cfg.backend
+    else:
+        name = {
+            "random": "random",
+            "load_spreading": "load_spreading",
+            "random_solver": "random_solver",
+            "spread_solver": "spread_solver",
+            "nomora": "auction" if cfg.solver == "auction" else "mcmf",
+        }[cfg.policy]
+    return make_backend(name, cfg.params, topo, lut_table)

@@ -35,22 +35,16 @@ non-deterministic input, measured solver wall time).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Literal, Optional
 
 import numpy as np
 
-from . import auction, flow_network, mcmf, perf_model
+from . import perf_model
 from .engine import EMPTY_IDS, JobTable, TaskTable, drop_positions, take_ready
 from .latency import LatencyPlane
 from .metrics import SimMetrics
-from .policy import (
-    PolicyParams,
-    RoundState,
-    dense_costs,
-    load_spreading_placement,
-    random_placement,
-)
+from .policy import PolicyParams, RoundState
+from .scheduler_backend import RoundContext, backend_for_config
 from .topology import Topology
 from .workload import Job, Workload
 
@@ -97,6 +91,10 @@ class SimConfig:
     policy: PolicyName = "nomora"
     params: PolicyParams = dataclasses.field(default_factory=PolicyParams)
     solver: Literal["auction", "mcmf"] = "auction"
+    # Explicit SchedulerBackend name (scheduler_backend.BACKEND_NAMES);
+    # overrides the (policy, solver) mapping when set. "auction" is the
+    # fused on-device round, "auction_host" the numpy reference path.
+    backend: Optional[str] = None
     round_interval_s: int = 1  # scheduling cadence (latency refresh cadence)
     migration_interval_s: int = 10  # preemption re-optimisation cadence
     perf_sample_interval_s: int = 15
@@ -141,7 +139,7 @@ class Simulator:
         self.pending_roots: np.ndarray = EMPTY_IDS  # root task ids, queue order
         self.pending: np.ndarray = EMPTY_IDS  # non-root task ids, queue order
         self.running: np.ndarray = EMPTY_IDS  # placed task ids, start order
-        self.warm_prices: Optional[np.ndarray] = None
+        self.backend = backend_for_config(config, self.topo, self.lut)
         self.dead: set = set()  # failed machines
         self.dead_mask = np.zeros(M, bool)
         self._failures = sorted(config.failures)
@@ -216,7 +214,7 @@ class Simulator:
 
             # 3. Scheduling round.
             migration_round = (
-                cfg.policy == "nomora"
+                self.backend.supports_migration
                 and cfg.params.preemption
                 and t % cfg.migration_interval_s == 0
             )
@@ -363,63 +361,19 @@ class Simulator:
                 np.asarray(kept, np.int64) if kept else EMPTY_IDS
             )
 
-        if cfg.policy == "random":
-            self._round_baseline(t, random=True)
-        elif cfg.policy == "load_spreading":
-            self._round_baseline(t, random=False)
-        else:
-            self._round_nomora(t, migration_round)
+        self._round_solve(t, migration_round)
 
     def _ready_prefix(self, limit: int):
         """Queue positions/ids of pending tasks whose root is placed."""
         ready_mask = self.jt.root_machine[self.tt.job[self.pending]] >= 0
         return take_ready(self.pending, ready_mask, limit)
 
-    def _baseline_costs(self, state: RoundState):
-        """Fixed-cost (random) / task-count (load-spreading) matrices run
-        through the same solver, mirroring Firmament baseline policies."""
-        T, J, M = state.n_tasks, state.n_jobs, state.n_machines
-        if self.cfg.policy == "random_solver":
-            # Fixed cost + random tie-break jitter (a flat matrix makes any
-            # assignment optimal; jitter picks one uniformly and keeps the
-            # auction free of degenerate price wars).
-            w_m = 100 + self.rng.integers(0, 10, size=(T, M)).astype(np.int64)
-        else:  # spread_solver: prefer less-loaded machines
-            w_m = 100 + np.broadcast_to(
-                self.task_counts[None, :], (T, M)
-            ).astype(np.int64)
-        w = np.full((T, M + J), int(2**30), np.int64)
-        w[:, :M] = w_m
-        a = (self.cfg.params.omega * state.wait_s + self.cfg.params.gamma).astype(
-            np.int64
-        )
-        w[np.arange(T), M + state.task_job] = a
-        return w
-
-    def _round_baseline(self, t: float, random: bool) -> None:
-        # Baselines schedule whatever is pending whose root is placed; the
-        # random policy uses fixed costs (schedule if idle), load-spreading
-        # balances task counts (paper §6.1).
-        pos, ready_ids = self._ready_prefix(self.cfg.max_round_tasks)
-        if not len(ready_ids):
-            return
-        t0 = time.perf_counter()
-        if random:
-            cols = random_placement(self.rng, len(ready_ids), self.free_slots)
-        else:
-            cols = load_spreading_placement(
-                self.task_counts, self.free_slots, len(ready_ids)
-            )
-        algo_s = self._algo_s(time.perf_counter() - t0)
-        self.metrics.algo_runtime_s.append(algo_s)
-        self.metrics.rounds += 1
-        placed = cols >= 0
-        if placed.any():
-            self._start_batch(ready_ids[placed], cols[placed], t, algo_s)
-            self.pending = drop_positions(self.pending, pos[placed])
-
     def _build_round_state(
-        self, ready_ids: np.ndarray, mover_ids: np.ndarray, t: float
+        self,
+        ready_ids: np.ndarray,
+        mover_ids: np.ndarray,
+        t: float,
+        with_latency: bool = True,
     ) -> RoundState:
         tids = np.concatenate([ready_ids, mover_ids])
         jdense = self.tt.job[tids]
@@ -431,9 +385,14 @@ class Simulator:
         job_ids_sorted = self.jt.job_id[job_dense_sorted]
         task_job = np.searchsorted(job_ids_sorted, jid_actual).astype(np.int64)
         root_machine = self.jt.root_machine[job_dense_sorted].astype(np.int64)
-        root_latency = np.stack(
-            [self.plane.latency_from(int(m), int(t)) for m in root_machine]
-        )
+        if with_latency:
+            root_latency = np.stack(
+                [self.plane.latency_from(int(m), int(t)) for m in root_machine]
+            )
+        else:
+            # Cost-model-free backends never read the latency plane; a
+            # zero-width stand-in makes accidental use fail loudly.
+            root_latency = np.zeros((len(root_machine), 0), np.float32)
         free = self.free_slots.copy()
         if len(mover_ids):  # movers' slots are reclaimable within the round
             np.add.at(free, self.tt.machine[mover_ids], 1)
@@ -473,70 +432,45 @@ class Simulator:
         # Bound the round size for tractability.
         return self.running[keep][: min(cfg.max_round_tasks, 512)]
 
-    def _round_nomora(self, t: float, migration_round: bool) -> None:
+    def _round_solve(self, t: float, migration_round: bool) -> None:
+        """One scheduling round: build RoundState, let the backend place."""
         cfg = self.cfg
-        # Admit at most (free capacity + slack) tasks per round: admitting a
-        # large backlog against a full cluster degenerates the auction into
-        # unscheduled-price wars (Firmament likewise schedules what fits;
-        # the remainder waits with escalating unscheduled cost).
-        admit = min(cfg.max_round_tasks, int(self.free_slots.sum()) + 64)
+        backend = self.backend
+        if backend.caps_admission:
+            # Admit at most (free capacity + slack) tasks per round: a large
+            # backlog against a full cluster degenerates the auction into
+            # unscheduled-price wars (Firmament likewise schedules what
+            # fits; the remainder waits with escalating unscheduled cost).
+            admit = min(cfg.max_round_tasks, int(self.free_slots.sum()) + 64)
+        else:
+            admit = cfg.max_round_tasks
         pos, ready_ids = self._ready_prefix(admit)
         mover_ids = EMPTY_IDS
-        if migration_round:
+        # Not redundant with run()'s migration_round gate: straggler rounds
+        # OR into the flag without consulting the backend. Seed semantics:
+        # every solver-family backend feeds movers into the round (for
+        # random_solver their presence even shifts the rng stream) and
+        # clears the straggler set, but only migration-capable backends
+        # later apply the mover columns; the two §6.1 heuristics do neither.
+        if migration_round and backend.selects_movers:
             mover_ids = self._select_movers()
             self._straggler_jobs.clear()
         if not len(ready_ids) and not len(mover_ids):
             return
 
-        state = self._build_round_state(ready_ids, mover_ids, t)
+        state = self._build_round_state(
+            ready_ids, mover_ids, t, with_latency=backend.needs_latency
+        )
         M = state.n_machines
-        if cfg.policy in ("random_solver", "spread_solver"):
-            w = self._baseline_costs(state)
-            t0 = time.perf_counter()
-            res = auction.solve_transportation(
-                w,
-                state.free_slots.astype(np.int64),
-                state.n_machines,
-                state.n_machines + state.task_job.astype(np.int64),
-                slots_per_machine=self.topo.slots_per_machine,
-                exact=False,
-            )
-            algo_s = self._algo_s(time.perf_counter() - t0)
-            self.metrics.algo_runtime_s.append(algo_s)
-            self.metrics.rounds += 1
-            rcols = np.asarray(res.assigned_col[: len(ready_ids)], np.int64)
-            placed = (rcols >= 0) & (rcols < M)
-            if placed.any():
-                self._start_batch(ready_ids[placed], rcols[placed], t, algo_s)
-                self.pending = drop_positions(self.pending, pos[placed])
-            return
-        costs = dense_costs(state, self.topo, cfg.params, self.lut)
-
-        t0 = time.perf_counter()
-        if cfg.solver == "auction":
-            res = auction.solve_transportation(
-                costs.w,
-                costs.col_capacity[:M],
-                M,
-                M + state.task_job.astype(np.int64),
-                warm_prices=self.warm_prices,
-                slots_per_machine=self.topo.slots_per_machine,
-                tie_jitter=9,
-                exact=False,  # <=1 cost-unit/task slack; 450x fewer tie crawls
-            )
-            cols = res.assigned_col
-            self.warm_prices = res.prices
-        else:
-            g = flow_network.build_flow_graph(state, self.topo, cfg.params, costs)
-            fr = mcmf.min_cost_max_flow(
-                g.src, g.dst, g.cap, g.cost, g.source, g.sink, g.n_nodes
-            )
-            cols = flow_network.extract_assignment(g, fr.flow, state)
-        algo_s = self._algo_s(time.perf_counter() - t0)
+        ctx = RoundContext(
+            rng=self.rng, task_counts=self.task_counts, n_ready=len(ready_ids)
+        )
+        placement = backend.place(state, ctx)
+        algo_s = self._algo_s(placement.algo_s)
         self.metrics.algo_runtime_s.append(algo_s)
         self.metrics.rounds += 1
 
-        cols = np.asarray(cols, np.int64)
+        cols = np.asarray(placement.cols, np.int64)
         n_ready = len(ready_ids)
         rcols = cols[:n_ready]
         placed = (rcols >= 0) & (rcols < M)
@@ -545,6 +479,10 @@ class Simulator:
             self.pending = drop_positions(self.pending, pos[placed])
         # Unplaced ready tasks stay pending (unscheduled aggregator).
 
+        if not backend.supports_migration:
+            # Solver baselines: mover columns are solved but never applied,
+            # and no migration metrics accrue (seed semantics).
+            return
         n_migrated = 0
         if len(mover_ids):
             mcols = cols[n_ready:]

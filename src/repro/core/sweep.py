@@ -1,14 +1,23 @@
 """Multi-scenario sweep runner: (policy x seed x scenario) grids.
 
 Runs the vectorized simulator over a full evaluation grid against one
-shared cluster: the topology and base `LatencyPlane` are built once and
-reused by every cell (scenarios that perturb latency derive a plane copy,
-cached per scenario), workloads are synthesized once per (seed, scenario)
-and reused across policies. This is the harness behind
-`benchmarks/sweep_bench.py` and `examples/sweep_cluster.py`, and the
-stepping stone toward Google-trace-size replays (ROADMAP "Open items"):
-cells are independent, so sharding the grid across processes/hosts only
-needs a partition of `SweepSpec.cells()`.
+shared cluster: the topology and base `LatencyPlane` are built once per
+process and reused by every cell (scenarios that perturb latency derive a
+plane copy, cached per scenario), workloads are synthesized once per
+(seed, scenario) and reused across policies. This is the harness behind
+`benchmarks/sweep_bench.py` and `examples/sweep_cluster.py`.
+
+Cells are independent, so `run_sweep(spec, workers=N)` shards the grid
+over a ``multiprocessing`` spawn pool: each worker rebuilds its shared
+objects from the spec (cached per process), and results merge back
+deterministically in `SweepSpec.cells()` grid order — byte-identical to a
+sequential run when `fixed_algo_s` pins solver wall time (only the
+per-cell `wall_s` stamps differ).
+
+A policy axis entry may select a scheduler backend per cell with a
+``policy:backend`` suffix — e.g. ``"nomora:mcmf"`` or
+``"nomora:auction_host"`` (see `scheduler_backend.BACKEND_NAMES`); bare
+names keep the default backend mapping.
 
 Results serialise to JSON (`SweepResult.to_jsonable` / `save`) so runs at
 different scales or commits stay comparable.
@@ -17,8 +26,10 @@ different scales or commits stay comparable.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import math
+import multiprocessing
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -144,54 +155,116 @@ def _workload_for(
     return synth_workload(topo, duration_s=spec.duration_s, seed=seed, **kwargs)
 
 
+def split_policy(policy: str) -> Tuple[str, Optional[str]]:
+    """Parse a ``policy`` / ``policy:backend`` cell label."""
+    base, _, backend = policy.partition(":")
+    return base, (backend or None)
+
+
+# Per-process caches: workers (and repeated sequential sweeps) rebuild the
+# shared cluster objects once per spec, not once per cell. Every input is
+# derived deterministically from the hashable frozen spec, so cached and
+# fresh objects are interchangeable.
+
+
+@functools.lru_cache(maxsize=2)
+def _base_plane(spec: SweepSpec) -> LatencyPlane:
+    return LatencyPlane.synthesize(
+        spec.topology(), duration_s=spec.duration_s, seed=spec.plane_seed
+    )
+
+
+@functools.lru_cache(maxsize=4)
+def _scenario_plane(spec: SweepSpec, scenario_name: str) -> LatencyPlane:
+    scenario = get_scenario(scenario_name)
+    return scenario.plane(_base_plane(spec), spec.duration_s)
+
+
+@functools.lru_cache(maxsize=2)
+def _scenario_workload(spec: SweepSpec, scenario_name: str, seed: int) -> Workload:
+    scenario = get_scenario(scenario_name)
+    return _workload_for(spec, spec.topology(), scenario, seed)
+
+
+def _run_cell(args: Tuple[SweepSpec, str, int, str]) -> SweepCell:
+    """One grid cell, rebuildable in any process (multiprocessing target)."""
+    spec, scenario_name, seed, policy = args
+    scenario = get_scenario(scenario_name)
+    topo = spec.topology()
+    plane = _scenario_plane(spec, scenario_name)
+    wl = _scenario_workload(spec, scenario_name, seed)
+    base_policy, backend = split_policy(policy)
+    cfg = SimConfig(
+        policy=base_policy,
+        backend=backend,
+        params=scenario.policy_params(),
+        seed=seed,
+        fixed_algo_s=spec.fixed_algo_s,
+        **scenario.sim_config_kwargs(topo, spec.duration_s, seed),
+    )
+    t0 = time.perf_counter()
+    metrics = Simulator(wl, plane, cfg).run()
+    return SweepCell(
+        scenario=scenario_name,
+        seed=seed,
+        policy=policy,
+        summary=metrics.summary(),
+        wall_s=time.perf_counter() - t0,
+    )
+
+
 def run_sweep(
     spec: SweepSpec,
     *,
     progress: Optional[Callable[[str], None]] = None,
+    workers: int = 1,
 ) -> SweepResult:
     """Run every (scenario, seed, policy) cell of `spec` and collect
-    `SimMetrics.summary()` per cell. Topology and the base latency plane
-    are shared; scenario-derived planes and per-(scenario, seed) workloads
-    are each built once."""
+    `SimMetrics.summary()` per cell.
+
+    ``workers > 1`` partitions the cells over a ``multiprocessing`` spawn
+    pool (cells are independent); results stream back and merge in
+    `spec.cells()` grid order regardless of completion order. The spawn
+    context avoids forking a process with live XLA state; each worker pays
+    one JAX import on startup, amortised across its share of the grid.
+    """
     say = progress or (lambda _msg: None)
-    topo = spec.topology()
-    base_plane = LatencyPlane.synthesize(
-        topo, duration_s=spec.duration_s, seed=spec.plane_seed
-    )
     t_sweep = time.perf_counter()
+    cell_keys = spec.cells()
+    jobs = [(spec, scenario, seed, policy) for scenario, seed, policy in cell_keys]
     cells: List[SweepCell] = []
-    for scenario_name in spec.scenarios:
-        scenario = get_scenario(scenario_name)
-        plane = scenario.plane(base_plane, spec.duration_s)
-        for seed in spec.seeds:
-            wl = _workload_for(spec, topo, scenario, seed)
-            cfg_kwargs = scenario.sim_config_kwargs(topo, spec.duration_s, seed)
-            for policy in spec.policies:
-                cfg = SimConfig(
-                    policy=policy,
-                    params=scenario.policy_params(),
-                    seed=seed,
-                    fixed_algo_s=spec.fixed_algo_s,
-                    **cfg_kwargs,
-                )
-                t0 = time.perf_counter()
-                metrics = Simulator(wl, plane, cfg).run()
-                wall = time.perf_counter() - t0
-                cells.append(
-                    SweepCell(
-                        scenario=scenario_name,
-                        seed=seed,
-                        policy=policy,
-                        summary=metrics.summary(),
-                        wall_s=wall,
-                    )
-                )
-                say(
-                    f"[sweep] {scenario_name}/{seed}/{policy}: "
-                    f"perf_area={cells[-1].summary['avg_app_perf_area']:.1f}% "
-                    f"placed={int(cells[-1].summary['tasks_placed'])} "
-                    f"({wall:.2f}s)"
-                )
+    try:
+        if workers > 1 and len(jobs) > 1:
+            ctx = multiprocessing.get_context("spawn")
+            with ctx.Pool(processes=min(workers, len(jobs))) as pool:
+                # imap preserves submission order => deterministic merge.
+                # Grid order is policy-minor, so policy-sized chunks keep
+                # each (scenario, seed) group — and its cached plane and
+                # workload — on a single worker.
+                for cell in pool.imap(
+                    _run_cell, jobs, chunksize=max(1, len(spec.policies))
+                ):
+                    cells.append(cell)
+                    _say_cell(say, cell)
+        else:
+            for job in jobs:
+                cells.append(_run_cell(job))
+                _say_cell(say, cells[-1])
+    finally:
+        # Planes/workloads can reach GBs at Google-trace scale; scope the
+        # per-process reuse to this run (workers free theirs at pool exit).
+        _base_plane.cache_clear()
+        _scenario_plane.cache_clear()
+        _scenario_workload.cache_clear()
     return SweepResult(
         spec=spec, cells=cells, wall_s=time.perf_counter() - t_sweep
+    )
+
+
+def _say_cell(say: Callable[[str], None], cell: SweepCell) -> None:
+    say(
+        f"[sweep] {cell.scenario}/{cell.seed}/{cell.policy}: "
+        f"perf_area={cell.summary['avg_app_perf_area']:.1f}% "
+        f"placed={int(cell.summary['tasks_placed'])} "
+        f"({cell.wall_s:.2f}s)"
     )

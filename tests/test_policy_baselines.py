@@ -1,0 +1,97 @@
+"""Vectorized baseline placements vs the seed per-task loops, bit for bit.
+
+(Separate from test_policy.py, which importorskips on hypothesis — these
+parity oracles must run everywhere.) The seed implementations live here
+verbatim as oracles for the O(M + T log M) rewrites in core/policy.py.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import policy
+
+
+def _random_placement_ref(rng, n_tasks, free_slots):
+    free = free_slots.astype(np.int64).copy()
+    out = np.full(n_tasks, -1, np.int64)
+    total = int(free.sum())
+    for t in range(n_tasks):
+        if total == 0:
+            break
+        k = int(rng.integers(total))
+        m = int(np.searchsorted(np.cumsum(free), k, side="right"))
+        out[t] = m
+        free[m] -= 1
+        total -= 1
+    return out
+
+
+def _load_spreading_ref(task_counts, free_slots, n_tasks):
+    counts = task_counts.astype(np.int64).copy()
+    free = free_slots.astype(np.int64).copy()
+    out = np.full(n_tasks, -1, np.int64)
+    for t in range(n_tasks):
+        avail = free > 0
+        if not avail.any():
+            break
+        masked = np.where(avail, counts, np.iinfo(np.int64).max)
+        m = int(np.argmin(masked))
+        out[t] = m
+        counts[m] += 1
+        free[m] -= 1
+    return out
+
+
+# dense_scan_ops=0 forces the Fenwick/heap branch; the default exercises
+# the seed-scan branch at these sizes. Both must match the oracle.
+@pytest.mark.parametrize("scan_ops", [policy.DENSE_SCAN_OPS, 0])
+@pytest.mark.parametrize("seed", range(8))
+def test_random_placement_matches_seed_loop(seed, scan_ops):
+    """Same placements AND the same post-call generator state (the stream
+    feeds subsequent root placements, so over-/under-consuming draws would
+    silently desynchronise whole replays)."""
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(1, 40))
+    free = rng.integers(0, 5, size=M)
+    n_tasks = int(rng.integers(0, int(free.sum()) + 6))
+    r_ref = np.random.default_rng(1000 + seed)
+    r_new = np.random.default_rng(1000 + seed)
+    expect = _random_placement_ref(r_ref, n_tasks, free)
+    got = policy.random_placement(r_new, n_tasks, free, dense_scan_ops=scan_ops)
+    assert np.array_equal(expect, got)
+    assert r_ref.integers(1 << 30) == r_new.integers(1 << 30)
+
+
+@pytest.mark.parametrize("scan_ops", [policy.DENSE_SCAN_OPS, 0])
+@pytest.mark.parametrize("seed", range(8))
+def test_load_spreading_matches_seed_loop(seed, scan_ops):
+    rng = np.random.default_rng(seed)
+    M = int(rng.integers(1, 40))
+    free = rng.integers(0, 4, size=M)
+    counts = rng.integers(0, 6, size=M)
+    n_tasks = int(rng.integers(0, int(free.sum()) + 6))
+    expect = _load_spreading_ref(counts, free, n_tasks)
+    got = policy.load_spreading_placement(
+        counts, free, n_tasks, dense_scan_ops=scan_ops
+    )
+    assert np.array_equal(expect, got)
+
+
+def test_placement_branches_agree_at_scale():
+    """Above the crossover the tree/heap branches engage by default and
+    still match the seed loops (Google-trace-shaped round: wide cluster)."""
+    rng = np.random.default_rng(11)
+    M, T = 600, 256  # T*M > DENSE_SCAN_OPS => tree/heap branch by default
+    free = rng.integers(0, 4, size=M)
+    counts = rng.integers(0, 6, size=M)
+    r_ref = np.random.default_rng(2)
+    r_new = np.random.default_rng(2)
+    assert np.array_equal(
+        _random_placement_ref(r_ref, T, free),
+        policy.random_placement(r_new, T, free),
+    )
+    assert r_ref.integers(1 << 30) == r_new.integers(1 << 30)
+    assert np.array_equal(
+        _load_spreading_ref(counts, free, T),
+        policy.load_spreading_placement(counts, free, T),
+    )

@@ -1,0 +1,221 @@
+"""Fused on-device cost pipeline vs the numpy host reference, bit for bit,
+plus backend equivalence through the `SchedulerBackend` interface.
+
+Tier-1 runs the jnp path; set REPRO_DEVICE_PARITY_PALLAS=1 to re-run the
+suite through the Pallas costmap kernel body in interpret mode:
+
+    REPRO_DEVICE_PARITY_PALLAS=1 PYTHONPATH=src \
+        python -m pytest -m device_parity -q
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import auction, latency, perf_model, policy, topology
+from repro.core.scheduler_backend import (
+    AuctionBackend,
+    MCMFBackend,
+    RoundContext,
+    make_backend,
+)
+from repro.core.simulator import SimConfig, Simulator
+
+pytestmark = pytest.mark.device_parity
+
+# Flip the costmap evaluation onto the Pallas kernel body (interpret mode
+# on CPU); the jnp LUT path is the tier-1 default.
+_PALLAS = os.environ.get("REPRO_DEVICE_PARITY_PALLAS", "") == "1"
+_COSTMAP_KW = dict(use_pallas=True, interpret=True) if _PALLAS else {}
+
+LUT = perf_model.perf_lut_table()
+
+# Full racks and a partial last rack (52 = 6.5 racks of 8).
+TOPO_FULL = topology.Topology(
+    n_machines=64, machines_per_rack=8, racks_per_pod=4, slots_per_machine=4
+)
+TOPO_PARTIAL = topology.Topology(
+    n_machines=52, machines_per_rack=8, racks_per_pod=3, slots_per_machine=4
+)
+PLANES = {
+    topo.n_machines: latency.LatencyPlane.synthesize(topo, duration_s=20, seed=0)
+    for topo in (TOPO_FULL, TOPO_PARTIAL)
+}
+
+
+def _state(rng, topo, T=14, J=3, preempt_running=False):
+    plane = PLANES[topo.n_machines]
+    roots = rng.integers(0, topo.n_machines, size=J)
+    cur = np.full(T, -1, np.int64)
+    run_s = np.zeros(T, np.float32)
+    if preempt_running:
+        cur[: T // 2] = rng.integers(0, topo.n_machines, size=T // 2)
+        run_s[: T // 2] = rng.uniform(0, 7200, size=T // 2)
+    return policy.RoundState(
+        task_job=np.sort(rng.integers(0, J, size=T)),
+        perf_idx=rng.integers(0, 4, size=T),
+        root_machine=roots,
+        root_latency=np.stack([plane.latency_from(int(m), 3) for m in roots]),
+        wait_s=rng.uniform(0, 100, size=T).astype(np.float32),
+        run_s=run_s,
+        cur_machine=cur,
+        free_slots=rng.integers(0, 4, size=topo.n_machines).astype(np.int32),
+    )
+
+
+FIELDS = ("w", "col_capacity", "d", "c_rack", "b", "a")
+
+
+@pytest.mark.parametrize("topo", [TOPO_FULL, TOPO_PARTIAL], ids=["full", "partial"])
+@pytest.mark.parametrize("preempt", [False, True], ids=["nopre", "pre"])
+@pytest.mark.parametrize("seed", range(5))
+def test_dense_costs_device_bit_identical(topo, preempt, seed):
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(3, 24))
+    J = int(rng.integers(1, 5))
+    state = _state(rng, topo, T=T, J=J, preempt_running=preempt)
+    params = policy.PolicyParams(preemption=preempt)
+    host = policy.dense_costs(state, topo, params, LUT)
+    dev = policy.dense_costs_device(state, topo, params, LUT, **_COSTMAP_KW)
+    for f in FIELDS:
+        h = np.asarray(getattr(host, f))
+        d = np.asarray(getattr(dev, f))
+        assert h.shape == d.shape, f
+        assert h.dtype == d.dtype, f
+        assert np.array_equal(h, d), f"{f} diverged (seed={seed})"
+
+
+def test_dense_costs_device_beta_zero_and_unsched_cap():
+    rng = np.random.default_rng(42)
+    state = _state(rng, TOPO_PARTIAL, T=12, J=2, preempt_running=True)
+    for params in (
+        policy.PolicyParams(preemption=True, beta_scale=0.0),
+        policy.PolicyParams(unsched_capacity=1),
+        policy.PolicyParams(p_m=120, p_r=125),
+    ):
+        host = policy.dense_costs(state, TOPO_PARTIAL, params, LUT)
+        dev = policy.dense_costs_device(
+            state, TOPO_PARTIAL, params, LUT, **_COSTMAP_KW
+        )
+        for f in FIELDS:
+            assert np.array_equal(
+                np.asarray(getattr(host, f)), np.asarray(getattr(dev, f))
+            ), f
+
+
+def test_padded_device_costs_slice_to_unpadded():
+    """The backend's bucketed pipeline == exact-shape pipeline on real rows."""
+    rng = np.random.default_rng(3)
+    state = _state(rng, TOPO_FULL, T=11, J=3)
+    params = policy.PolicyParams()
+    exact = policy.device_round_costs(state, TOPO_FULL, params, LUT, **_COSTMAP_KW)
+    padded = policy.device_round_costs(
+        state, TOPO_FULL, params, LUT,
+        n_pad_tasks=32, n_pad_jobs=8, **_COSTMAP_KW,
+    )
+    T = state.n_tasks
+    for e, p in zip(exact, padded):
+        assert np.array_equal(np.asarray(e), np.asarray(p)[:T])
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_device_solve_matches_host_solve(seed):
+    """Same costs in => bit-identical assignment out of both solve paths,
+    in the production config (inexact + tie jitter) and the exact one."""
+    rng = np.random.default_rng(100 + seed)
+    topo = TOPO_PARTIAL
+    state = _state(rng, topo, T=int(rng.integers(4, 20)), J=2)
+    params = policy.PolicyParams()
+    host = policy.dense_costs(state, topo, params, LUT)
+    M = topo.n_machines
+    w_m, a, *_ = policy.device_round_costs(
+        state, topo, params, LUT,
+        n_pad_tasks=auction._bucket(state.n_tasks),
+        n_pad_jobs=auction._bucket(state.n_jobs, 8),
+        **_COSTMAP_KW,
+    )
+    for kwargs in (dict(tie_jitter=9, exact=False), dict(tie_jitter=0, exact=True)):
+        res_h = auction.solve_transportation(
+            host.w, host.col_capacity[:M], M, M + state.task_job,
+            slots_per_machine=topo.slots_per_machine, **kwargs,
+        )
+        res_d = auction.solve_transportation_device(
+            w_m, a, state.n_tasks, state.free_slots, M, state.task_job,
+            slots_per_machine=topo.slots_per_machine, **kwargs,
+        )
+        assert np.array_equal(res_h.assigned_col, res_d.assigned_col)
+        assert res_h.total_cost == res_d.total_cost
+        assert res_h.iterations == res_d.iterations
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_backend_equivalence_auction_vs_mcmf(seed):
+    """AuctionBackend (exact mode) and MCMFBackend reach the same optimum
+    through the SchedulerBackend interface."""
+    rng = np.random.default_rng(500 + seed)
+    topo = TOPO_PARTIAL
+    state = _state(rng, topo, T=10, J=2)
+    params = policy.PolicyParams()
+    ctx = RoundContext(
+        rng=np.random.default_rng(0),
+        task_counts=np.zeros(topo.n_machines, np.int64),
+        n_ready=state.n_tasks,
+    )
+    auction_exact = AuctionBackend(
+        params, topo, LUT, device=True, tie_jitter=0, exact=True, **_COSTMAP_KW
+    )
+    mcmf_backend = MCMFBackend(params, topo, LUT)
+    pa = auction_exact.place(state, ctx)
+    pm = mcmf_backend.place(state, ctx)
+    assert pa.objective == pm.objective
+    M = topo.n_machines
+    for p in (pa, pm):
+        machines = p.cols[(p.cols >= 0) & (p.cols < M)]
+        counts = np.bincount(machines, minlength=M)
+        assert np.all(counts <= state.free_slots)
+
+
+def test_simulator_device_and_host_backends_bit_identical():
+    """Full replays through backend='auction' vs 'auction_host' emit
+    identical metrics — the fused round is a drop-in for the numpy one."""
+    from repro.core.workload import synth_workload
+
+    topo = topology.Topology(
+        n_machines=32, machines_per_rack=8, racks_per_pod=2, slots_per_machine=4
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=90, seed=1)
+    wl = synth_workload(topo, duration_s=90, seed=1, target_utilisation=0.6)
+    metrics = {}
+    for backend in ("auction", "auction_host"):
+        cfg = SimConfig(
+            policy="nomora", backend=backend, seed=5, fixed_algo_s=0.0,
+            params=policy.PolicyParams(preemption=True, beta_scale=0.0),
+            migration_interval_s=30,
+        )
+        metrics[backend] = Simulator(wl, plane, cfg).run()
+    a, b = metrics["auction"], metrics["auction_host"]
+    assert a.tasks_placed == b.tasks_placed
+    assert a.tasks_migrated == b.tasks_migrated
+    assert a.rounds == b.rounds
+    assert a.placement_latency_s == b.placement_latency_s
+    assert a.response_time_s == b.response_time_s
+    assert a.per_job_perf == b.per_job_perf
+
+
+def test_make_backend_names_and_config_resolution():
+    params = policy.PolicyParams()
+    for name, cls_name in [
+        ("auction", "AuctionBackend"),
+        ("auction_host", "AuctionBackend"),
+        ("mcmf", "MCMFBackend"),
+        ("random", "RandomBackend"),
+        ("load_spreading", "LoadSpreadingBackend"),
+        ("random_solver", "RandomSolverBackend"),
+        ("spread_solver", "SpreadSolverBackend"),
+    ]:
+        be = make_backend(name, params, TOPO_FULL, LUT)
+        assert type(be).__name__ == cls_name
+        assert be.name == name
+    with pytest.raises(KeyError):
+        make_backend("nope", params, TOPO_FULL, LUT)
