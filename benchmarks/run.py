@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures covered:
   Fig. 9  response_time      - submission -> completion
   (extra) sweep_bench        - SoA engine speedup + multi-scenario sweep
   (extra) round_pipeline     - host-numpy vs fused on-device round
+  (extra) trace_scale        - trace replay peak-RSS / wall gates
   (extra) kernel_bench       - scheduler kernel microbenchmarks
 
 REPRO_BENCH_SCALE={small,medium,paper} controls simulation size.
@@ -31,6 +32,7 @@ def main() -> None:
         response_time,
         round_pipeline,
         sweep_bench,
+        trace_scale,
     )
 
     modules = [
@@ -42,6 +44,7 @@ def main() -> None:
         ("response_time", response_time),
         ("sweep_bench", sweep_bench),
         ("round_pipeline", round_pipeline),
+        ("trace_scale", trace_scale),
         ("kernel_bench", kernel_bench),
     ]
     print("name,us_per_call,derived")

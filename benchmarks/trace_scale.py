@@ -1,0 +1,177 @@
+"""Trace-scale replay gate: peak RSS + wall clock (ISSUE-3 acceptance).
+
+Replays a synthesized Google-shaped trace (`core.trace.synth_trace`,
+chunked windows — the job list is never materialized) through the
+vectorized simulator with streaming metrics
+(`SimConfig(streaming_metrics=True)`, bounded accumulators instead of
+full in-memory series) and asserts the replay stays under a committed
+peak-RSS and wall-clock gate.
+
+The replay runs in a **subprocess** so ``ru_maxrss`` measures this replay
+alone, not whatever benchmark ran earlier in the harness process. The
+paper-scale configuration (``REPRO_BENCH_SCALE=paper``) is the paper's
+evaluation setup: 12,500 machines (48/rack, 16 racks/pod), 24h, 0.6 slot
+utilisation — ~10^5 jobs / ~10^6 tasks admitted from hourly windows. The
+default ``small`` scale replays 2h on 1,536 machines so the gate runs in
+the 1-core container harness; gates are committed per scale.
+
+Results land in benchmarks/results/trace_scale.json; regenerate
+deliberately before committing.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+RESULTS_PATH = os.path.join(os.path.dirname(__file__), "results", "trace_scale.json")
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+
+# scale -> (machines, machines/rack, racks/pod, duration_s, utilisation,
+#           peak-RSS gate MB, wall gate s). RSS gates are ~2x headroom over
+# measured (streaming metrics keep the replay flat; an accidental return
+# to exact series or a dense O(M^2) matrix blows straight through them).
+CONFIGS = {
+    "small": (1_536, 48, 16, 7_200, 0.6, 1_024, 300),
+    "medium": (4_000, 48, 16, 21_600, 0.6, 1_536, 900),
+    "paper": (12_500, 48, 16, 86_400, 0.6, 3_072, 3_600),
+}
+
+POLICY = "random"  # heuristic backend: the gate measures replay machinery,
+# not solver cost (solver scaling is benchmarks/round_pipeline.py's claim)
+WINDOW_S = 3_600
+SEED = 42
+
+
+def _child_main(payload: dict) -> None:
+    """Run one replay and print a JSON result line (subprocess entry)."""
+    import resource
+
+    import numpy as np  # noqa: F401  (keep import cost inside the measurement)
+
+    from repro.core import latency, topology
+    from repro.core.simulator import SimConfig, Simulator
+    from repro.core.trace import synth_trace
+
+    topo = topology.Topology(
+        n_machines=payload["machines"],
+        machines_per_rack=payload["mpr"],
+        racks_per_pod=payload["rpp"],
+        slots_per_machine=8,
+    )
+    t0 = time.perf_counter()
+    plane = latency.LatencyPlane.synthesize(
+        topo, duration_s=payload["duration_s"], seed=SEED
+    )
+    plane_s = time.perf_counter() - t0
+    cursor = synth_trace(
+        topo,
+        payload["duration_s"],
+        seed=SEED,
+        window_s=WINDOW_S,
+        target_utilisation=payload["util"],
+    )
+    cfg = SimConfig(
+        policy=POLICY,
+        seed=SEED,
+        fixed_algo_s=0.0,
+        streaming_metrics=True,
+    )
+    t0 = time.perf_counter()
+    sim = Simulator(cursor, plane, cfg)
+    metrics = sim.run()
+    replay_s = time.perf_counter() - t0
+    summary = metrics.summary()
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # ru_maxrss is kilobytes on Linux but bytes on macOS.
+    peak_mb = peak / 1024.0**2 if sys.platform == "darwin" else peak / 1024.0
+    print(
+        json.dumps(
+            {
+                "peak_rss_mb": peak_mb,
+                "plane_s": plane_s,
+                "replay_s": replay_s,
+                "jobs_admitted": int(sim.jt.n),
+                "tasks_admitted": int(sim.tt.n),
+                "tasks_placed": int(summary["tasks_placed"]),
+                "rounds": int(summary["rounds"]),
+                "avg_app_perf_area": summary["avg_app_perf_area"],
+                "response_time_s_p90": summary["response_time_s_p90"],
+            }
+        )
+    )
+
+
+def _run_child(payload: dict) -> dict:
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.trace_scale", "--child", json.dumps(payload)],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    if out.returncode != 0:
+        # Surface the child's traceback (an OOM kill or import error would
+        # otherwise reach the harness as a bare CalledProcessError).
+        raise RuntimeError(
+            f"trace replay child exited {out.returncode}:\n{out.stderr}"
+        )
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run():
+    machines, mpr, rpp, duration_s, util, rss_gate_mb, wall_gate_s = CONFIGS[SCALE]
+    payload = {
+        "machines": machines,
+        "mpr": mpr,
+        "rpp": rpp,
+        "duration_s": duration_s,
+        "util": util,
+    }
+    res = _run_child(payload)
+    rss_ok = res["peak_rss_mb"] <= rss_gate_mb
+    wall_ok = res["replay_s"] <= wall_gate_s
+    result = {
+        "scale": SCALE,
+        "config": payload | {"policy": POLICY, "window_s": WINDOW_S, "seed": SEED},
+        "gates": {"peak_rss_mb": rss_gate_mb, "replay_wall_s": wall_gate_s},
+        "measured": res,
+        "rss_gate_ok": rss_ok,
+        "wall_gate_ok": wall_ok,
+    }
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+        f.write("\n")
+    assert rss_ok, (
+        f"trace-scale replay peak RSS {res['peak_rss_mb']:.0f}MB exceeds the "
+        f"{rss_gate_mb}MB gate — a full series/event list is back in memory?"
+    )
+    assert wall_ok, (
+        f"trace-scale replay took {res['replay_s']:.0f}s "
+        f"(gate {wall_gate_s}s)"
+    )
+    return [
+        (
+            f"trace_replay_{machines}m_{duration_s}s",
+            res["replay_s"] * 1e6,
+            f"peak_rss_mb={res['peak_rss_mb']:.0f};gate_mb={rss_gate_mb};"
+            f"tasks={res['tasks_placed']};jobs={res['jobs_admitted']}",
+        ),
+    ]
+
+
+if __name__ == "__main__":
+    if len(sys.argv) >= 3 and sys.argv[1] == "--child":
+        _child_main(json.loads(sys.argv[2]))
+    else:
+        for name, us, derived in run():
+            print(f"{name},{us:.1f},{derived}")

@@ -10,7 +10,10 @@ Layers (paper §5.1 architecture):
      (structure-of-arrays; seed per-object loop kept in reference_sim as
      the parity oracle)
   6. scenarios   - declarative perturbation presets (failures, hotspots)
-     sweep       - (policy x seed x scenario) grid runner
+     sweep       - (policy x seed x scenario) grid runner, multi-host
+     shardable (`run_sweep(spec, shard=(i, n))` + `merge_sweep_results`)
+  7. trace          - Google cluster-trace ingestion + chunked synthesis
+     metrics_stream - bounded mergeable accumulators for trace-scale runs
 """
 
 from . import (  # noqa: F401
@@ -20,6 +23,7 @@ from . import (  # noqa: F401
     latency,
     mcmf,
     metrics,
+    metrics_stream,
     perf_model,
     policy,
     reference_sim,
@@ -27,5 +31,6 @@ from . import (  # noqa: F401
     simulator,
     sweep,
     topology,
+    trace,
     workload,
 )

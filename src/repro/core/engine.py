@@ -24,11 +24,33 @@ import numpy as np
 EMPTY_IDS = np.empty(0, np.int64)
 
 
+def _init_columns(table) -> None:
+    """Allocate a table's column arrays from its ``_FILLS`` spec."""
+    for name, (fill, dtype) in table._FILLS.items():
+        setattr(table, name, np.full(table.capacity, fill, dtype))
+
+
+def _grow_columns(table, min_capacity: int) -> None:
+    """Double a SoA table's column arrays (shared by Task/JobTable).
+
+    Admitted rows are copied; fresh rows get the column's sentinel fill
+    from ``_FILLS`` — the single source of truth for column layout."""
+    new = max(min_capacity, table.capacity * 2, 64)
+    for name, (fill, dtype) in table._FILLS.items():
+        arr = np.full(new, fill, dtype)
+        arr[: table.n] = getattr(table, name)[: table.n]
+        setattr(table, name, arr)
+    table.capacity = new
+
+
 @dataclasses.dataclass
 class TaskTable:
-    """Parallel per-task arrays (capacity fixed at total workload size).
+    """Parallel per-task arrays (capacity grows by doubling on demand).
 
-    ``n`` counts admitted tasks; rows ``>= n`` are unused capacity. Float
+    ``n`` counts admitted tasks; rows ``>= n`` are unused capacity. Size
+    the initial capacity to ``workload.n_tasks_total`` when it is known
+    (one allocation); trace cursors with unknown totals pass an estimate
+    (`n_tasks_hint`) and the table doubles as admission outruns it. Float
     columns are float64 so arithmetic matches the seed engine's Python
     floats exactly; ``job`` holds the *dense* job index (admission order),
     not the workload's ``job_id``.
@@ -45,25 +67,26 @@ class TaskTable:
     end_s: np.ndarray = None  # (N,) float64; -1 == not finished
     wait_s: np.ndarray = None  # (N,) float64
 
+    # Column layout: name -> (sentinel fill for unused rows, dtype).
+    _FILLS = {
+        "job": (0, np.int64),
+        "task_idx": (0, np.int64),
+        "submit_s": (0.0, np.float64),
+        "machine": (-1, np.int64),
+        "start_s": (-1.0, np.float64),
+        "placed_s": (-1.0, np.float64),
+        "end_s": (-1.0, np.float64),
+        "wait_s": (0.0, np.float64),
+    }
+
     def __post_init__(self):
-        c = self.capacity
-        self.job = np.zeros(c, np.int64)
-        self.task_idx = np.zeros(c, np.int64)
-        self.submit_s = np.zeros(c, np.float64)
-        self.machine = np.full(c, -1, np.int64)
-        self.start_s = np.full(c, -1.0, np.float64)
-        self.placed_s = np.full(c, -1.0, np.float64)
-        self.end_s = np.full(c, -1.0, np.float64)
-        self.wait_s = np.zeros(c, np.float64)
+        _init_columns(self)
 
     def append_job(self, job_dense: int, n_tasks: int, submit_s: float) -> np.ndarray:
         """Admit one job's tasks; returns their dense task ids (root first)."""
         lo, hi = self.n, self.n + n_tasks
         if hi > self.capacity:
-            raise ValueError(
-                f"TaskTable capacity exceeded ({hi} > {self.capacity}); "
-                "size it to workload.n_tasks_total"
-            )
+            _grow_columns(self, hi)
         ids = np.arange(lo, hi, dtype=np.int64)
         self.job[lo:hi] = job_dense
         self.task_idx[lo:hi] = np.arange(n_tasks)
@@ -93,33 +116,48 @@ class TaskTable:
 
 @dataclasses.dataclass
 class JobTable:
-    """Parallel per-job arrays, indexed densely in admission order."""
+    """Parallel per-job arrays, indexed densely in admission order
+    (capacity grows by doubling, like `TaskTable`)."""
 
     capacity: int
     n: int = 0
     job_id: np.ndarray = None  # (J,) int64 workload job_id
     duration_s: np.ndarray = None  # (J,) float64
     perf_idx: np.ndarray = None  # (J,) int64
+    arrival_s: np.ndarray = None  # (J,) float64 workload arrival time
     root_machine: np.ndarray = None  # (J,) int64; -1 == root unplaced
     done: np.ndarray = None  # (J,) bool, sticky
     unfinished: np.ndarray = None  # (J,) int64 tasks not yet completed
 
-    def __post_init__(self):
-        c = self.capacity
-        self.job_id = np.zeros(c, np.int64)
-        self.duration_s = np.zeros(c, np.float64)
-        self.perf_idx = np.zeros(c, np.int64)
-        self.root_machine = np.full(c, -1, np.int64)
-        self.done = np.zeros(c, bool)
-        self.unfinished = np.zeros(c, np.int64)
+    # Column layout: name -> (sentinel fill for unused rows, dtype).
+    _FILLS = {
+        "job_id": (0, np.int64),
+        "duration_s": (0.0, np.float64),
+        "perf_idx": (0, np.int64),
+        "arrival_s": (0.0, np.float64),
+        "root_machine": (-1, np.int64),
+        "done": (False, bool),
+        "unfinished": (0, np.int64),
+    }
 
-    def append(self, job_id: int, duration_s: float, perf_idx: int, n_tasks: int) -> int:
+    def __post_init__(self):
+        _init_columns(self)
+
+    def append(
+        self,
+        job_id: int,
+        duration_s: float,
+        perf_idx: int,
+        n_tasks: int,
+        arrival_s: float = 0.0,
+    ) -> int:
         j = self.n
         if j >= self.capacity:
-            raise ValueError("JobTable capacity exceeded")
+            _grow_columns(self, j + 1)
         self.job_id[j] = job_id
         self.duration_s[j] = duration_s
         self.perf_idx[j] = perf_idx
+        self.arrival_s[j] = arrival_s
         self.unfinished[j] = n_tasks
         self.n = j + 1
         return j

@@ -33,6 +33,9 @@ from .topology import (
 
 TRACES_PER_TIER = 6  # paper: 6 traces per tier (GCE / Azure / EC2)
 SAME_MACHINE_RTT_US = 2.0  # paper: "a small constant" for intra-host latency
+# `matrix()` materializes O(M^2) floats; beyond this it refuses and points
+# callers at the O(pairs) `latency_pairs` / O(M) `latency_from` APIs.
+MAX_MATRIX_MACHINES = 4096
 
 # Tier RTT parameters (us) matched to the cloud ranges reported in the
 # paper's measurement study [41] and the Azure numbers it cites from [45]:
@@ -184,9 +187,23 @@ class LatencyPlane:
         coeff = self._coeff(np.asarray([tier]), u)
         return float(self.series[tier, trace_id[0], int(t) % self.duration_s] * coeff[0])
 
-    def matrix(self, t: int) -> np.ndarray:
-        """Full RTT matrix at second `t` (small clusters / tests only)."""
+    def matrix(self, t: int, max_machines: int = MAX_MATRIX_MACHINES) -> np.ndarray:
+        """Full RTT matrix at second `t` (small clusters / tests only).
+
+        O(M^2) memory and time — a 12,500-machine matrix is 1.25GB of
+        float64 per call, which silently sinks trace-scale replays.
+        Guarded: raise ``max_machines`` explicitly if a dense matrix is
+        truly intended; otherwise use `latency_pairs` (vectorised pair
+        lookups) or `latency_from` (one row).
+        """
         n = self.topo.n_machines
+        if n > max_machines:
+            raise ValueError(
+                f"LatencyPlane.matrix is O(M^2) and n_machines={n} exceeds "
+                f"max_machines={max_machines}; use latency_pairs(a, b, t) "
+                "for pair lookups or latency_from(m, t) for one row "
+                "(pass max_machines explicitly to override)"
+            )
         return np.stack([self.latency_from(m, t) for m in range(n)], axis=0)
 
     def default_latency(self, tiers: np.ndarray) -> np.ndarray:

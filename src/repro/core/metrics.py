@@ -9,6 +9,12 @@
 - task placement latency: submission -> placement, including round runtime.
 - task response time: submission -> completion.
 - migrated tasks: % of running tasks migrated per round (preemption mode).
+
+`SimMetrics` keeps exact per-sample series (lists) — the reference for
+parity tests and small replays. At trace scale those series dominate peak
+RSS; select `metrics_stream.StreamingSimMetrics` instead (same mutation
+surface and ``summary()`` schema, bounded memory, documented quantile
+tolerance) via ``SimConfig(streaming_metrics=True)``.
 """
 
 from __future__ import annotations

@@ -12,7 +12,9 @@ bit-for-bit.
 The preset grid covers the evaluation axes the paper varies one at a time
 — baseline replay, preemption on, machine failures, straggler-heavy, and
 hotspot latency — so `sweep.run_sweep` can replay every policy across all
-of them in one call.
+of them in one call. The `google_trace` preset swaps the materialized
+workload for a chunked `trace.synth_trace` cursor with streaming metrics,
+the configuration the trace-scale (12,500-machine / 24h) replays run under.
 """
 
 from __future__ import annotations
@@ -36,6 +38,10 @@ class Scenario:
     description: str
     # synth_workload overrides (e.g. target_utilisation).
     workload_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    # When set, the cell's workload is a chunked `trace.synth_trace` cursor
+    # (streamed admission, no materialized job list) built with these
+    # kwargs (e.g. window_s) merged over the sweep's target_utilisation.
+    trace_kwargs: Optional[Mapping] = None
     # SimConfig field overrides (e.g. migration_interval_s).
     config_kwargs: Mapping = dataclasses.field(default_factory=dict)
     # PolicyParams field overrides (e.g. preemption).
@@ -136,6 +142,15 @@ SCENARIOS: Dict[str, Scenario] = {
             hotspot_tiers=(TIER_POD, TIER_INTER_POD),
             hotspot_scale=4.0,
             hotspot_window=(0.3, 0.8),
+        ),
+        Scenario(
+            name="google_trace",
+            description=(
+                "chunked Google-trace replay: streamed job admission "
+                "(trace.synth_trace windows) + bounded streaming metrics"
+            ),
+            trace_kwargs={"window_s": 3600},
+            config_kwargs={"streaming_metrics": True},
         ),
     )
 }

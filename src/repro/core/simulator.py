@@ -30,14 +30,26 @@ loop survives unchanged in `reference_sim.ReferenceSimulator`;
 tests/test_engine_parity.py proves the two emit bit-identical `SimMetrics`
 at fixed seeds (set `SimConfig.fixed_algo_s` to pin the one
 non-deterministic input, measured solver wall time).
+
+Trace scale: the workload argument may be a *cursor* (`core.trace`) — any
+object with ``topo``, ``duration_s`` and a re-iterable ``jobs`` property
+that yields arrival-ordered `Job` records lazily — so a 24h Google-trace
+replay admits from chunked windows and never materializes the job list;
+the SoA tables grow by doubling from the cursor's size hints. Pair it
+with ``SimConfig(streaming_metrics=True)`` to swap `SimMetrics`' full
+in-memory series for the bounded `metrics_stream.StreamingSimMetrics`
+accumulators (same ``summary()`` schema, documented quantile tolerance).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Literal, Optional
+from typing import TYPE_CHECKING, Dict, List, Literal, Optional
 
 import numpy as np
+
+if TYPE_CHECKING:
+    from .metrics_stream import StreamingSimMetrics
 
 from . import perf_model
 from .engine import EMPTY_IDS, JobTable, TaskTable, drop_positions, take_ready
@@ -46,7 +58,7 @@ from .metrics import SimMetrics
 from .policy import PolicyParams, RoundState
 from .scheduler_backend import RoundContext, backend_for_config
 from .topology import Topology
-from .workload import Job, Workload
+from .workload import Job
 
 PolicyName = Literal[
     "nomora",
@@ -109,6 +121,14 @@ class SimConfig:
     # response times include the round's algorithm runtime, so wall-clock
     # jitter leaks into the metrics; parity tests pin it (usually to 0.0).
     fixed_algo_s: float | None = None
+    # Bounded-memory metrics (`metrics_stream.StreamingSimMetrics`) instead
+    # of exact `SimMetrics`: required for trace-scale replays where the
+    # per-sample series dominate RSS. Same summary() schema; quantiles are
+    # estimates within metrics_stream.QUANTILE_RTOL.
+    streaming_metrics: bool = False
+    # With streaming metrics, keep a bounded per-job reservoir of this many
+    # perf samples (0 = means only) for distributional spot checks.
+    perf_reservoir_k: int = 0
 
 
 class Simulator:
@@ -116,7 +136,7 @@ class Simulator:
 
     def __init__(
         self,
-        workload: Workload,
+        workload,  # Workload, or a trace cursor (core.trace) streamed lazily
         plane: LatencyPlane,
         config: SimConfig,
     ):
@@ -125,17 +145,34 @@ class Simulator:
         self.plane = plane
         self.cfg = config
         self.rng = np.random.default_rng(config.seed)
-        self.metrics = SimMetrics()
+        if config.streaming_metrics:
+            from .metrics_stream import StreamingSimMetrics
+
+            self.metrics = StreamingSimMetrics(
+                reservoir_k=config.perf_reservoir_k, seed=config.seed
+            )
+        else:
+            self.metrics = SimMetrics()
         self.lut = perf_model.perf_lut_table()
         self.lut_np = np.asarray(self.lut)
 
         M = self.topo.n_machines
         self.free_slots = np.full(M, self.topo.slots_per_machine, np.int32)
         self.task_counts = np.zeros(M, np.int64)  # for load-spreading
-        self.tt = TaskTable(capacity=workload.n_tasks_total)
-        self.jt = JobTable(capacity=len(workload.jobs))
-        self._job_objs: List[Job] = []
-        self._job_span: List[tuple] = []  # dense job -> (lo, hi) task ids
+        # Trace cursors carry size *hints* (tables grow on demand); a
+        # materialized Workload sizes the tables exactly, in one shot.
+        tcap = getattr(workload, "n_tasks_hint", None)
+        jcap = getattr(workload, "n_jobs_hint", None)
+        self.tt = TaskTable(
+            capacity=workload.n_tasks_total if tcap is None else tcap
+        )
+        self.jt = JobTable(
+            capacity=len(workload.jobs) if jcap is None else jcap
+        )
+        # Sparse: only LM jobs carry an ml_arch label. Everything else a
+        # `jobs`-view record needs lives in the SoA tables, so a streamed
+        # replay retains no per-job Python objects.
+        self._ml_arch: Dict[int, str] = {}  # dense job -> ml_arch
         self.pending_roots: np.ndarray = EMPTY_IDS  # root task ids, queue order
         self.pending: np.ndarray = EMPTY_IDS  # non-root task ids, queue order
         self.running: np.ndarray = EMPTY_IDS  # placed task ids, start order
@@ -158,14 +195,29 @@ class Simulator:
     def jobs(self) -> Dict[int, JobRec]:
         """Per-object view of the SoA state (seed-compatible read API).
 
-        Materialised on access; mutating the returned records does not
-        write back into the engine.
+        Materialised on access — `Job` records are reconstructed from the
+        table columns (task spans recovered from the admission-ordered
+        ``tt.job``), so nothing per-job is retained during a streamed
+        replay. Mutating the returned records does not write back into
+        the engine.
         """
         tt, jt = self.tt, self.jt
+        jn = jt.n
+        dense = np.arange(jn)
+        # tt.job is non-decreasing (tasks admitted job by job), so each
+        # job's tasks are the contiguous run [lo[j], hi[j]).
+        lo = np.searchsorted(tt.job[: tt.n], dense, side="left")
+        hi = np.searchsorted(tt.job[: tt.n], dense, side="right")
         out: Dict[int, JobRec] = {}
-        for j in range(jt.n):
-            job = self._job_objs[j]
-            lo, hi = self._job_span[j]
+        for j in range(jn):
+            job = Job(
+                job_id=int(jt.job_id[j]),
+                arrival_s=float(jt.arrival_s[j]),
+                n_tasks=int(hi[j] - lo[j]),
+                duration_s=float(jt.duration_s[j]),
+                perf_idx=int(jt.perf_idx[j]),
+                ml_arch=self._ml_arch.get(j),
+            )
             tasks = [
                 TaskRec(
                     job_id=job.job_id,
@@ -177,7 +229,7 @@ class Simulator:
                     end_s=float(tt.end_s[i]),
                     wait_s=float(tt.wait_s[i]),
                 )
-                for i in range(lo, hi)
+                for i in range(int(lo[j]), int(hi[j]))
             ]
             out[job.job_id] = JobRec(
                 job=job,
@@ -189,7 +241,7 @@ class Simulator:
 
     # ------------------------------------------------------------------ #
 
-    def run(self) -> SimMetrics:
+    def run(self) -> "SimMetrics | StreamingSimMetrics":
         cfg = self.cfg
         duration = self.wl.duration_s
         jobs_iter = iter(self.wl.jobs)
@@ -247,11 +299,12 @@ class Simulator:
         roots, workers = [self.pending_roots], [self.pending]
         for job in jobs:
             j = self.jt.append(
-                job.job_id, float(job.duration_s), int(job.perf_idx), job.n_tasks
+                job.job_id, float(job.duration_s), int(job.perf_idx),
+                job.n_tasks, float(job.arrival_s),
             )
             ids = self.tt.append_job(j, job.n_tasks, float(max(t, job.arrival_s)))
-            self._job_objs.append(job)
-            self._job_span.append((int(ids[0]), int(ids[-1]) + 1))
+            if job.ml_arch is not None:
+                self._ml_arch[j] = job.ml_arch
             roots.append(ids[:1])
             workers.append(ids[1:])
         self.pending_roots = np.concatenate(roots)
@@ -541,7 +594,22 @@ class Simulator:
         # arrival order) each job's tasks form a contiguous run, and a slice
         # mean over the run is bit-identical to the masked mean (same values,
         # order, dtype) at O(T) instead of O(jobs * T).
-        if np.all(jids[1:] >= jids[:-1]):
+        contiguous = bool(np.all(jids[1:] >= jids[:-1]))
+        if (
+            contiguous
+            and self.straggler is None
+            and hasattr(self.metrics, "record_perf_bulk")
+        ):
+            # Streaming metrics: stay vectorized end to end — a Python loop
+            # over ~10^4 active jobs per sampling round is the scaling wall
+            # at trace size. reduceat sums differ from the exact slice means
+            # only in float association (within the documented tolerance).
+            uniq, starts = np.unique(jids, return_index=True)
+            sums = np.add.reduceat(perf.astype(np.float64), starts)
+            counts = np.diff(np.append(starts, len(jids)))
+            self.metrics.record_perf_bulk(uniq, sums / counts)
+            return
+        if contiguous:
             uniq, starts = np.unique(jids, return_index=True)
             bounds = np.append(starts, len(jids))
             samples = [
@@ -560,8 +628,8 @@ class Simulator:
 
 
 def simulate(
-    workload: Workload,
+    workload,  # Workload, or a trace cursor (core.trace) streamed lazily
     plane: LatencyPlane,
     config: SimConfig,
-) -> SimMetrics:
+) -> "SimMetrics | StreamingSimMetrics":
     return Simulator(workload, plane, config).run()

@@ -14,6 +14,15 @@ deterministically in `SweepSpec.cells()` grid order — byte-identical to a
 sequential run when `fixed_algo_s` pins solver wall time (only the
 per-cell `wall_s` stamps differ).
 
+Multi-host partitioning: ``run_sweep(spec, shard=(i, n))`` runs only the
+``i``-th of ``n`` contiguous, deterministic slices of `SweepSpec.cells()`
+(balanced like ``np.array_split``, so each (scenario, seed) cache group
+stays on one host where possible). Each shard saves its own JSON;
+`merge_sweep_results` (or `load_sweep_result` + merge) recombines the
+shards into the full grid, cell-for-cell identical to the single-host
+`run_sweep` output for the same spec (summaries are bit-identical under
+`fixed_algo_s`; only wall-clock stamps differ).
+
 A policy axis entry may select a scheduler backend per cell with a
 ``policy:backend`` suffix — e.g. ``"nomora:mcmf"`` or
 ``"nomora:auction_host"`` (see `scheduler_backend.BACKEND_NAMES`); bare
@@ -37,7 +46,8 @@ from .latency import LatencyPlane
 from .scenarios import Scenario, get_scenario
 from .simulator import SimConfig, Simulator
 from .topology import Topology
-from .workload import Workload, synth_workload
+from .trace import synth_trace
+from .workload import synth_workload
 
 DEFAULT_POLICIES = ("random", "load_spreading", "nomora")
 
@@ -104,6 +114,9 @@ class SweepResult:
     spec: SweepSpec
     cells: List[SweepCell]
     wall_s: float = 0.0
+    # (i, n) when this result holds shard i of an n-way partition of the
+    # grid; None for a full (single-host or merged) result.
+    shard: Optional[Tuple[int, int]] = None
 
     def cell(self, scenario: str, seed: int, policy: str) -> SweepCell:
         for c in self.cells:
@@ -116,8 +129,22 @@ class SweepResult:
             {
                 "spec": dataclasses.asdict(self.spec),
                 "wall_s": self.wall_s,
+                "shard": list(self.shard) if self.shard is not None else None,
                 "cells": [dataclasses.asdict(c) for c in self.cells],
             }
+        )
+
+    @classmethod
+    def from_jsonable(cls, d: Dict) -> "SweepResult":
+        spec_d = dict(d["spec"])
+        for k in ("policies", "seeds", "scenarios"):
+            spec_d[k] = tuple(spec_d[k])
+        shard = d.get("shard")
+        return cls(
+            spec=SweepSpec(**spec_d),
+            cells=[SweepCell(**c) for c in d["cells"]],
+            wall_s=d.get("wall_s", 0.0),
+            shard=tuple(shard) if shard is not None else None,
         )
 
     def save(self, path: str) -> None:
@@ -143,15 +170,22 @@ class SweepResult:
         return "\n".join(lines)
 
 
-def _workload_for(
-    spec: SweepSpec, topo: Topology, scenario: Scenario, seed: int
-) -> Workload:
+def _workload_for(spec: SweepSpec, topo: Topology, scenario: Scenario, seed: int):
     # Dict-literal merge: scenario overrides win (dict(k=..., **{...}) would
     # raise on a duplicate key like target_utilisation).
     kwargs = {
         "target_utilisation": spec.target_utilisation,
         **scenario.workload_kwargs,
     }
+    if scenario.trace_kwargs is not None:
+        # Trace-replay scenario: a chunked cursor (re-iterable across the
+        # policy cells that share it) instead of a materialized Workload.
+        return synth_trace(
+            topo,
+            duration_s=spec.duration_s,
+            seed=seed,
+            **{**kwargs, **scenario.trace_kwargs},
+        )
     return synth_workload(topo, duration_s=spec.duration_s, seed=seed, **kwargs)
 
 
@@ -181,7 +215,8 @@ def _scenario_plane(spec: SweepSpec, scenario_name: str) -> LatencyPlane:
 
 
 @functools.lru_cache(maxsize=2)
-def _scenario_workload(spec: SweepSpec, scenario_name: str, seed: int) -> Workload:
+def _scenario_workload(spec: SweepSpec, scenario_name: str, seed: int):
+    """A `Workload`, or a re-iterable trace cursor for trace scenarios."""
     scenario = get_scenario(scenario_name)
     return _workload_for(spec, spec.topology(), scenario, seed)
 
@@ -213,11 +248,30 @@ def _run_cell(args: Tuple[SweepSpec, str, int, str]) -> SweepCell:
     )
 
 
+def shard_cells(
+    cells: List[Tuple[str, int, str]], shard: Tuple[int, int]
+) -> List[Tuple[str, int, str]]:
+    """Deterministic contiguous slice ``i`` of an ``n``-way partition.
+
+    Balanced like ``np.array_split`` (sizes differ by at most one), so
+    shard boundaries and the concatenation order are pure functions of
+    (len(cells), n) and concatenating shards 0..n-1 reproduces ``cells``.
+    """
+    i, n = shard
+    if n <= 0 or not 0 <= i < n:
+        raise ValueError(f"shard must be (i, n) with 0 <= i < n, got {shard}")
+    q, r = divmod(len(cells), n)
+    lo = i * q + min(i, r)
+    hi = lo + q + (1 if i < r else 0)
+    return cells[lo:hi]
+
+
 def run_sweep(
     spec: SweepSpec,
     *,
     progress: Optional[Callable[[str], None]] = None,
     workers: int = 1,
+    shard: Optional[Tuple[int, int]] = None,
 ) -> SweepResult:
     """Run every (scenario, seed, policy) cell of `spec` and collect
     `SimMetrics.summary()` per cell.
@@ -227,10 +281,17 @@ def run_sweep(
     `spec.cells()` grid order regardless of completion order. The spawn
     context avoids forking a process with live XLA state; each worker pays
     one JAX import on startup, amortised across its share of the grid.
+
+    ``shard=(i, n)`` runs only the ``i``-th of ``n`` deterministic
+    contiguous slices of the grid (multi-host partitioning; composes with
+    ``workers``). Recombine the per-shard results with
+    `merge_sweep_results`, which reproduces the single-host grid exactly.
     """
     say = progress or (lambda _msg: None)
     t_sweep = time.perf_counter()
     cell_keys = spec.cells()
+    if shard is not None:
+        cell_keys = shard_cells(cell_keys, shard)
     jobs = [(spec, scenario, seed, policy) for scenario, seed, policy in cell_keys]
     cells: List[SweepCell] = []
     try:
@@ -257,8 +318,49 @@ def run_sweep(
         _scenario_plane.cache_clear()
         _scenario_workload.cache_clear()
     return SweepResult(
-        spec=spec, cells=cells, wall_s=time.perf_counter() - t_sweep
+        spec=spec, cells=cells, wall_s=time.perf_counter() - t_sweep,
+        shard=tuple(shard) if shard is not None else None,
     )
+
+
+def merge_sweep_results(results: List[SweepResult]) -> SweepResult:
+    """Recombine `run_sweep(spec, shard=(i, n))` outputs into the full grid.
+
+    Requires one result per shard of a single n-way partition of one spec
+    (duplicates, gaps, or mixed specs raise). The merged cell list is in
+    `spec.cells()` grid order — cell-for-cell identical to the single-host
+    `run_sweep(spec)` output (bit-identical summaries under
+    ``fixed_algo_s``); the merged ``wall_s`` is the sum over shards.
+    """
+    if not results:
+        raise ValueError("no results to merge")
+    spec = results[0].spec
+    for r in results[1:]:
+        if r.spec != spec:
+            raise ValueError("cannot merge results from different specs")
+    if any(r.shard is None for r in results):
+        raise ValueError("merge inputs must be sharded results (shard=(i, n))")
+    n = results[0].shard[1]
+    seen = sorted(r.shard[0] for r in results)
+    if any(r.shard[1] != n for r in results) or seen != list(range(n)):
+        raise ValueError(
+            f"shards must cover 0..{n - 1} exactly once, got "
+            f"{sorted(r.shard for r in results)}"
+        )
+    ordered = sorted(results, key=lambda r: r.shard[0])
+    cells = [c for r in ordered for c in r.cells]
+    keys = [(c.scenario, c.seed, c.policy) for c in cells]
+    if keys != spec.cells():
+        raise ValueError("merged cells do not reproduce the spec grid")
+    return SweepResult(
+        spec=spec, cells=cells, wall_s=sum(r.wall_s for r in results), shard=None
+    )
+
+
+def load_sweep_result(path: str) -> SweepResult:
+    """Load a saved `SweepResult` (e.g. one shard's JSON) for merging."""
+    with open(path) as f:
+        return SweepResult.from_jsonable(json.load(f))
 
 
 def _say_cell(say: Callable[[str], None], cell: SweepCell) -> None:

@@ -147,5 +147,10 @@ def test_task_table_capacity_and_requeue():
     tt.requeue(ids[:1])
     assert tt.machine[0] == -1 and tt.end_s[0] == -1.0 and tt.wait_s[0] == 0.0
     assert tt.machine[1] == 4  # others untouched
-    with pytest.raises(ValueError):
-        tt.append_job(1, 3, 0.0)  # 3 + 3 > 5
+    # Admission past capacity grows the table (trace cursors size it from
+    # a hint) without disturbing admitted rows or unused-row sentinels.
+    ids2 = tt.append_job(1, 3, 0.0)  # 3 + 3 > 5: doubles
+    assert ids2.tolist() == [3, 4, 5] and tt.capacity >= 6
+    assert tt.machine[1] == 4 and tt.end_s[2] == 12.5
+    assert (tt.machine[ids2] == -1).all()
+    assert (tt.start_s[tt.n :] == -1.0).all()

@@ -1,6 +1,7 @@
 """Latency plane + workload synthesis tests (paper §6 recipes)."""
 
 import numpy as np
+import pytest
 
 from repro.core import latency, topology, workload
 
@@ -62,6 +63,26 @@ def test_in_rack_coefficient_range():
     tiers = TOPO.tier_from(0)
     raw = plane.series[topology.TIER_RACK, :, t].max()
     assert lat[tiers == topology.TIER_RACK].max() <= raw + 1e-5
+
+
+def test_matrix_guarded_at_trace_scale():
+    """`matrix()` is O(M^2): beyond max_machines it must refuse loudly and
+    point at the O(pairs)/O(M) APIs instead of sinking a replay."""
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=20, seed=5)
+    full = plane.matrix(7)
+    assert full.shape == (96, 96)
+    np.testing.assert_array_equal(full[3], plane.latency_from(3, 7))
+    with pytest.raises(ValueError, match="latency_pairs"):
+        plane.matrix(7, max_machines=64)
+    # Explicit override for a caller that truly wants the dense matrix.
+    assert plane.matrix(7, max_machines=96).shape == (96, 96)
+    big = latency.LatencyPlane.synthesize(
+        topology.google_topology(latency.MAX_MATRIX_MACHINES + 1),
+        duration_s=2,
+        seed=0,
+    )
+    with pytest.raises(ValueError, match="O\\(M\\^2\\)"):
+        big.matrix(0)
 
 
 def test_workload_no_single_task_jobs():

@@ -1,0 +1,267 @@
+"""Streaming metric accumulators: tolerance vs exact numpy, mergeability.
+
+The contract under test (metrics_stream module docstring): quantile
+estimates lie within `QUANTILE_RTOL` relative error of the *bracketing
+order statistics* (``np.percentile`` with ``method='lower'``/``'higher'``
+— linear interpolation between adjacent order statistics is unbounded on
+adversarial two-point data, so the bracket is the sound property);
+means/variances match numpy to float tolerance; shard merges are
+order-invariant (exactly for counts/quantiles/max, ~1e-9 relative for
+means); and a streaming simulator run reports the same ``summary()``
+schema as the exact one, within those tolerances.
+
+Seeded randomized adversarial streams, no hypothesis dependency (the
+hypothesis property suite is tests/test_metrics_stream_property.py).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.metrics import SimMetrics, percentiles
+from repro.core.metrics_stream import (
+    HIST_HI,
+    HIST_LO,
+    QUANTILE_RTOL,
+    LogHistogram,
+    P2Quantile,
+    ReservoirSample,
+    StreamingSimMetrics,
+    StreamSeries,
+    Welford,
+)
+
+
+def assert_quantile_bracketed(est: float, values: np.ndarray, q: float) -> None:
+    """`est` within QUANTILE_RTOL of the order statistics bracketing q."""
+    lo = np.percentile(values, q, method="lower")
+    hi = np.percentile(values, q, method="higher")
+    assert lo * (1 - QUANTILE_RTOL) - 1e-12 <= est <= hi * (1 + QUANTILE_RTOL) + 1e-12, (
+        f"q={q}: estimate {est} outside [{lo}, {hi}] +/- {QUANTILE_RTOL:.3%}"
+    )
+
+
+def adversarial_stream(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Zeros, heavy atoms, and 12 orders of magnitude in one stream."""
+    kind = rng.integers(0, 4, size=n)
+    out = np.zeros(n, np.float64)
+    out[kind == 1] = 10.0 ** rng.uniform(-6, 9, size=int((kind == 1).sum()))
+    out[kind == 2] = rng.choice([1.0, 2.0, 1e6], size=int((kind == 2).sum()))
+    out[kind == 3] = rng.lognormal(0.0, 3.0, size=int((kind == 3).sum()))
+    return out
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_welford_matches_numpy(seed):
+    rng = np.random.default_rng(seed)
+    v = adversarial_stream(rng, int(rng.integers(1, 400)))
+    w = Welford()
+    for x in v:
+        w.add(float(x))
+    assert w.count == len(v)
+    np.testing.assert_allclose(w.mean, v.mean(), rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(w.var, v.var(), rtol=1e-7, atol=1e-9)
+    # Batch path agrees with the scalar path.
+    wb = Welford()
+    wb.add_many(v)
+    np.testing.assert_allclose(wb.mean, w.mean, rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_histogram_quantiles_bracketed(seed):
+    rng = np.random.default_rng(100 + seed)
+    v = adversarial_stream(rng, int(rng.integers(1, 400)))
+    h = LogHistogram()
+    h.add_many(v)
+    assert h.count == len(v)
+    assert h.min == v.min() and h.max == v.max()  # exact extremes
+    for q in (50.0, 90.0, 99.0):
+        assert_quantile_bracketed(h.quantile(q), v, q)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_stream_series_merge_order_invariant(seed):
+    """Sharding the stream and merging in any order changes nothing."""
+    rng = np.random.default_rng(200 + seed)
+    v = adversarial_stream(rng, int(rng.integers(2, 400)))
+    whole = StreamSeries()
+    whole.extend(v)
+    n_shards = int(rng.integers(2, 6))
+    bounds = np.sort(rng.integers(0, len(v) + 1, size=n_shards - 1))
+    pieces = np.split(v, bounds)
+    rng.shuffle(pieces)
+    merged = StreamSeries()
+    for p in pieces:
+        s = StreamSeries()
+        s.extend(p)
+        merged.merge(s)
+    assert merged.count == whole.count
+    assert merged.max == whole.max
+    np.testing.assert_allclose(merged.mean, whole.mean, rtol=1e-9, atol=1e-12)
+    for q in (50, 90, 99):
+        assert merged.quantile(q) == whole.quantile(q)  # integer counts: exact
+
+
+def test_histogram_domain_edges():
+    h = LogHistogram()
+    h.add_many(np.asarray([HIST_LO / 10, HIST_HI * 10, -3.0, 0.0]))
+    assert h.count == 4
+    # Saturating bins still give order-correct quantiles, clamped to the
+    # exact extremes; negatives sort before zeros before positives.
+    assert h.quantile(0) == -3.0
+    assert h.quantile(100) == HIST_HI * 10
+    assert h.quantile(40) == 0.0
+
+
+def test_p2_quantile_on_smooth_distributions():
+    """P² is the O(1) single-stream estimator; on smooth unimodal data it
+    should land within a few percent of numpy (no adversarial bound)."""
+    rng = np.random.default_rng(7)
+    for dist in (rng.normal(100.0, 15.0, 5000), rng.lognormal(1.0, 0.5, 5000)):
+        for p in (0.5, 0.9, 0.99):
+            est = P2Quantile(p)
+            for x in dist:
+                est.add(float(x))
+            exact = np.percentile(dist, 100 * p)
+            spread = dist.max() - dist.min()
+            assert abs(est.value - exact) <= 0.05 * spread, (p, est.value, exact)
+
+
+def test_p2_quantile_small_n_and_validation():
+    q = P2Quantile(0.5)
+    assert np.isnan(q.value)
+    for x in (3.0, 1.0, 2.0):
+        q.add(x)
+    assert q.value == 2.0  # nearest-rank on the stored prefix
+    with pytest.raises(ValueError):
+        P2Quantile(0.0)
+
+
+def test_reservoir_bounded_and_deterministic():
+    r1 = ReservoirSample(16, seed=3)
+    r2 = ReservoirSample(16, seed=3)
+    for x in range(1000):
+        r1.add(float(x))
+        r2.add(float(x))
+    assert len(r1.values) == 16 and r1.count == 1000
+    assert r1.values == r2.values  # seeded: reproducible
+    assert all(0 <= v < 1000 for v in r1.values)
+
+
+def test_stream_series_empty_summary_matches_exact_shape():
+    # metrics.percentiles on an empty series emits p* + max (no mean);
+    # the streaming stand-in must mirror that exactly.
+    exact = percentiles([])
+    stream = StreamSeries().summary()
+    assert set(stream) == set(exact)
+    assert all(np.isnan(v) for v in stream.values())
+
+
+def test_streaming_simmetrics_schema_and_perf_paths():
+    exact = SimMetrics()
+    stream = StreamingSimMetrics(reservoir_k=8)
+    bulk = StreamingSimMetrics()
+    rng = np.random.default_rng(0)
+    for t in range(50):
+        jobs = np.arange(5)
+        perfs = rng.uniform(0.2, 1.0, size=5)
+        for j, p in zip(jobs, perfs):
+            exact.record_perf_sample(int(j), float(p))
+            stream.record_perf_sample(int(j), float(p))
+        bulk.record_perf_bulk(jobs, perfs)
+        exact.placement_latency_s.append(float(t))
+        stream.placement_latency_s.append(float(t))
+        bulk.placement_latency_s.append(float(t))
+    np.testing.assert_allclose(
+        stream.job_averages(), exact.job_averages(), rtol=1e-9
+    )
+    np.testing.assert_allclose(
+        bulk.job_averages(), exact.job_averages(), rtol=1e-9
+    )
+    res = stream.job_reservoir(0)
+    assert res is not None and res.count == 50 and len(res.values) == 8
+    se, ss = exact.summary(), stream.summary()
+    assert set(se) == set(ss)
+    np.testing.assert_allclose(
+        ss["avg_app_perf_area"], se["avg_app_perf_area"], rtol=1e-9
+    )
+    v = np.arange(50, dtype=np.float64)
+    for q in (50, 90, 99):
+        assert_quantile_bracketed(ss[f"placement_latency_s_p{q}"], v, q)
+
+
+def test_streaming_simmetrics_merge_matches_whole():
+    rng = np.random.default_rng(1)
+    whole = StreamingSimMetrics()
+    parts = [StreamingSimMetrics() for _ in range(3)]
+    for i in range(300):
+        j = int(rng.integers(0, 12))
+        p = float(rng.uniform())
+        rt = float(rng.lognormal(3.0, 1.0))
+        whole.record_perf_sample(j, p)
+        whole.response_time_s.append(rt)
+        whole.tasks_placed += 1
+        shard = parts[i % 3]
+        shard.record_perf_sample(j, p)
+        shard.response_time_s.append(rt)
+        shard.tasks_placed += 1
+    merged = parts[1]  # merge in non-stream order
+    merged.merge(parts[2])
+    merged.merge(parts[0])
+    sw, sm = whole.summary(), merged.summary()
+    assert set(sw) == set(sm)
+    assert sm["tasks_placed"] == sw["tasks_placed"]
+    assert sm["jobs_measured"] == sw["jobs_measured"]
+    assert sm["response_time_s_max"] == sw["response_time_s_max"]
+    for q in (50, 90, 99):
+        assert sm[f"response_time_s_p{q}"] == sw[f"response_time_s_p{q}"]
+    np.testing.assert_allclose(
+        sm["avg_app_perf_area"], sw["avg_app_perf_area"], rtol=1e-9
+    )
+    np.testing.assert_allclose(
+        sm["response_time_s_mean"], sw["response_time_s_mean"], rtol=1e-9
+    )
+
+
+def test_simulator_streaming_vs_exact_tolerance():
+    """The ISSUE-3 exact-vs-streaming gate: one replay, both metric
+    engines, identical schema, documented tolerances per key kind."""
+    from repro.core import latency, topology
+    from repro.core.simulator import SimConfig, Simulator
+    from repro.core.workload import synth_workload
+
+    topo = topology.Topology(
+        n_machines=48, machines_per_rack=8, racks_per_pod=3, slots_per_machine=4
+    )
+    wl = synth_workload(topo, duration_s=240, seed=5, target_utilisation=0.6)
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=240, seed=2)
+    m_exact = Simulator(
+        wl, plane, SimConfig(policy="nomora", seed=5, fixed_algo_s=0.0)
+    ).run()
+    m_stream = Simulator(
+        wl,
+        plane,
+        SimConfig(policy="nomora", seed=5, fixed_algo_s=0.0, streaming_metrics=True),
+    ).run()
+    assert isinstance(m_exact, SimMetrics)
+    assert isinstance(m_stream, StreamingSimMetrics)
+    se, ss = m_exact.summary(), m_stream.summary()
+    assert set(se) == set(ss)
+    exact_series = {
+        "algo_runtime_s": m_exact.algo_runtime_s,
+        "placement_latency_s": m_exact.placement_latency_s,
+        "response_time_s": m_exact.response_time_s,
+        "migrated_pct": m_exact.migrated_pct_per_round,
+    }
+    quantile_keys = {
+        f"{name}_p{q}": (name, q) for name in exact_series for q in (50, 90, 99)
+    }
+    for k in se:
+        a, b = se[k], ss[k]
+        if np.isnan(a):
+            assert np.isnan(b), k
+        elif k in quantile_keys:
+            name, q = quantile_keys[k]
+            assert_quantile_bracketed(b, np.asarray(exact_series[name]), q)
+        else:
+            # counts, means, maxima: float-tolerance agreement
+            np.testing.assert_allclose(b, a, rtol=1e-6, atol=1e-9, err_msg=k)

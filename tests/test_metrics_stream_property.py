@@ -1,0 +1,100 @@
+"""Hypothesis property suite for the streaming accumulators.
+
+Adversarial distributions (zeros, heavy atoms, 12 orders of magnitude):
+quantile estimates must stay within `QUANTILE_RTOL` of the bracketing
+order statistics, Welford must match numpy, and shard merges must be
+order-invariant. The deterministic (no-hypothesis) coverage lives in
+tests/test_metrics_stream.py so a clean environment still runs it.
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.metrics_stream import LogHistogram, StreamSeries, Welford
+from test_metrics_stream import assert_quantile_bracketed
+
+# Adversarial-but-in-domain sample lists: zeros, duplicates, 12 orders of
+# magnitude, heavy atoms.
+samples = st.lists(
+    st.one_of(
+        st.just(0.0),
+        st.floats(min_value=1e-6, max_value=1e9),
+        st.sampled_from([1.0, 1.0, 2.0, 1e6]),
+    ),
+    min_size=1,
+    max_size=300,
+)
+
+
+@given(samples)
+@settings(max_examples=150, deadline=None)
+def test_welford_matches_numpy(xs):
+    v = np.asarray(xs, np.float64)
+    w = Welford()
+    for x in xs:
+        w.add(x)
+    assert w.count == len(xs)
+    np.testing.assert_allclose(w.mean, v.mean(), rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(w.var, v.var(), rtol=1e-7, atol=1e-9)
+    # Batch path agrees with the scalar path.
+    wb = Welford()
+    wb.add_many(v)
+    np.testing.assert_allclose(wb.mean, w.mean, rtol=1e-9, atol=1e-12)
+
+
+@given(samples, st.sampled_from([50.0, 90.0, 99.0]))
+@settings(max_examples=150, deadline=None)
+def test_histogram_quantiles_bracketed(xs, q):
+    v = np.asarray(xs, np.float64)
+    h = LogHistogram()
+    h.add_many(v)
+    assert h.count == len(xs)
+    assert h.min == v.min() and h.max == v.max()  # exact extremes
+    assert_quantile_bracketed(h.quantile(q), v, q)
+
+
+@given(samples, st.integers(min_value=2, max_value=5), st.randoms())
+@settings(max_examples=100, deadline=None)
+def test_histogram_merge_order_invariant(xs, n_shards, rnd):
+    """Sharding the stream and merging in any order changes nothing."""
+    v = np.asarray(xs, np.float64)
+    whole = LogHistogram()
+    whole.add_many(v)
+    bounds = sorted(rnd.randrange(0, len(xs) + 1) for _ in range(n_shards - 1))
+    pieces = np.split(v, bounds)
+    rnd.shuffle(pieces)
+    merged = LogHistogram()
+    for p in pieces:
+        shard = LogHistogram()
+        shard.add_many(p)
+        merged.merge(shard)
+    assert merged.count == whole.count
+    assert merged.zero_count == whole.zero_count
+    assert merged.min == whole.min and merged.max == whole.max
+    for q in (50, 90, 99):
+        assert merged.quantile(q) == whole.quantile(q)  # integer counts: exact
+
+
+@given(samples, st.integers(min_value=2, max_value=4), st.randoms())
+@settings(max_examples=75, deadline=None)
+def test_stream_series_merge_order_invariant(xs, n_shards, rnd):
+    v = np.asarray(xs, np.float64)
+    whole = StreamSeries()
+    whole.extend(v)
+    bounds = sorted(rnd.randrange(0, len(xs) + 1) for _ in range(n_shards - 1))
+    pieces = np.split(v, bounds)
+    rnd.shuffle(pieces)
+    merged = StreamSeries()
+    for p in pieces:
+        s = StreamSeries()
+        s.extend(p)
+        merged.merge(s)
+    assert merged.count == whole.count
+    assert merged.max == whole.max
+    np.testing.assert_allclose(merged.mean, whole.mean, rtol=1e-9, atol=1e-12)
+    for q in (50, 90, 99):
+        assert merged.quantile(q) == whole.quantile(q)

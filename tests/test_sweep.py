@@ -22,9 +22,13 @@ def test_preset_grid_complete():
         "failure_bursts",
         "straggler_heavy",
         "hotspot_latency",
+        "google_trace",
     }
     with pytest.raises(KeyError):
         get_scenario("nope")
+    gt = get_scenario("google_trace")
+    assert gt.trace_kwargs is not None  # streamed-cursor workload
+    assert gt.config_kwargs["streaming_metrics"] is True
 
 
 def test_failures_deterministic_and_bounded():
@@ -128,7 +132,8 @@ def test_scenario_workload_override_wins():
 
 def test_run_sweep_workers_matches_sequential():
     """Sharding cells over a process pool must reproduce the sequential
-    sweep cell-for-cell, merged in grid order."""
+    sweep bit-identically, cell-for-cell in grid order, across the full
+    2-scenario x 2-seed x 2-policy grid."""
     spec = SweepSpec(
         n_machines=16,
         machines_per_rack=8,
@@ -137,7 +142,7 @@ def test_run_sweep_workers_matches_sequential():
         target_utilisation=0.5,
         policies=("random", "load_spreading"),
         seeds=(0, 1),
-        scenarios=("baseline",),
+        scenarios=("baseline", "failure_bursts"),
         fixed_algo_s=0.0,
     )
     seq = run_sweep(spec)
@@ -146,8 +151,79 @@ def test_run_sweep_workers_matches_sequential():
     assert keys == spec.cells() == [
         (c.scenario, c.seed, c.policy) for c in seq.cells
     ]
+    assert len(keys) == 8
     for a, b in zip(seq.to_jsonable()["cells"], par.to_jsonable()["cells"]):
         assert a["summary"] == b["summary"]
+
+
+def test_run_sweep_shard_merge_bit_identical(tmp_path):
+    """run_sweep(spec, shard=(i, n)) shards recombine — in memory or via
+    per-shard JSON — bit-identically with the single-host grid."""
+    from repro.core.sweep import (
+        load_sweep_result,
+        merge_sweep_results,
+        shard_cells,
+    )
+
+    spec = SweepSpec(
+        n_machines=16,
+        machines_per_rack=8,
+        racks_per_pod=2,
+        duration_s=60,
+        target_utilisation=0.5,
+        policies=("random", "load_spreading"),
+        seeds=(0, 1),
+        scenarios=("baseline", "google_trace"),
+        fixed_algo_s=0.0,
+    )
+    cells = spec.cells()
+    # The partition is deterministic, contiguous, balanced, and complete.
+    parts = [shard_cells(cells, (i, 3)) for i in range(3)]
+    assert [c for p in parts for c in p] == cells
+    assert max(len(p) for p in parts) - min(len(p) for p in parts) <= 1
+
+    def comparable(result):
+        # Everything but the per-cell wall-clock stamps (documented: the
+        # only field a re-run may change under fixed_algo_s).
+        return [
+            {k: v for k, v in c.items() if k != "wall_s"}
+            for c in result.to_jsonable()["cells"]
+        ]
+
+    full = run_sweep(spec)
+    shards = [run_sweep(spec, shard=(i, 3)) for i in range(3)]
+    assert [(c.scenario, c.seed, c.policy) for c in shards[0].cells] == parts[0]
+    merged = merge_sweep_results(shards)
+    assert merged.shard is None
+    assert comparable(merged) == comparable(full)
+
+    # Multi-host path: each shard saved to JSON, loaded back, merged.
+    paths = []
+    for s in shards:
+        p = tmp_path / f"shard{s.shard[0]}.json"
+        s.save(str(p))
+        paths.append(str(p))
+    loaded = [load_sweep_result(p) for p in paths]
+    assert all(loaded[i].shard == (i, 3) for i in range(3))
+    merged2 = merge_sweep_results(loaded)
+    assert comparable(merged2) == comparable(full)
+
+
+def test_shard_validation_errors():
+    from repro.core.sweep import merge_sweep_results, shard_cells
+
+    spec = SweepSpec(policies=("random",), seeds=(0,), scenarios=("baseline",))
+    with pytest.raises(ValueError):
+        shard_cells(spec.cells(), (2, 2))
+    with pytest.raises(ValueError):
+        shard_cells(spec.cells(), (0, 0))
+    with pytest.raises(ValueError):
+        merge_sweep_results([])
+    a = run_sweep(spec, shard=(0, 2))
+    with pytest.raises(ValueError):  # duplicate shard, missing shard 1
+        merge_sweep_results([a, a])
+    with pytest.raises(ValueError):  # unsharded input
+        merge_sweep_results([run_sweep(spec)])
 
 
 def test_sweep_backend_per_cell():

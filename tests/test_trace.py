@@ -1,0 +1,186 @@
+"""Trace subsystem: chunked synthesis, CSV ingestion, streamed replay.
+
+The load-bearing claims: a `synth_trace` cursor is deterministic and
+re-iterable, yields arrival-sorted densely-numbered jobs window by
+window, and replaying it through the simulator is **bit-identical** to
+replaying the same jobs materialized into a `Workload` (streamed
+admission changes nothing but peak memory). The SoA tables grow on
+demand, so a cursor's size hints are never correctness-relevant.
+"""
+
+import gzip
+
+import numpy as np
+import pytest
+
+from repro.core import latency, topology
+from repro.core.engine import JobTable, TaskTable
+from repro.core.perf_model import APP_MODEL_INDEX
+from repro.core.simulator import SimConfig, Simulator
+from repro.core.trace import (
+    EVENT_FINISH,
+    EVENT_SUBMIT,
+    CsvTraceCursor,
+    materialize,
+    read_task_events,
+    synth_trace,
+)
+
+TOPO = topology.Topology(
+    n_machines=48, machines_per_rack=8, racks_per_pod=3, slots_per_machine=4
+)
+
+
+def job_tuples(jobs):
+    return [
+        (j.job_id, j.arrival_s, j.n_tasks, j.duration_s, j.perf_idx) for j in jobs
+    ]
+
+
+def test_synth_trace_deterministic_and_reiterable():
+    cur = synth_trace(TOPO, 600, seed=3, window_s=120)
+    first = job_tuples(cur.jobs)
+    assert first == job_tuples(cur.jobs)  # re-iterable: same stream
+    assert first == job_tuples(synth_trace(TOPO, 600, seed=3, window_s=120).jobs)
+    assert first != job_tuples(synth_trace(TOPO, 600, seed=4, window_s=120).jobs)
+
+
+def test_synth_trace_stream_shape():
+    cur = synth_trace(TOPO, 600, seed=0, window_s=120)
+    jobs = list(cur.jobs)
+    assert len(jobs) > 4
+    arrivals = [j.arrival_s for j in jobs]
+    assert arrivals == sorted(arrivals)  # admission order
+    assert [j.job_id for j in jobs] == list(range(len(jobs)))  # dense ids
+    for j in jobs:
+        assert j.n_tasks >= 2  # paper: single-task jobs dropped
+        assert 0.0 <= j.arrival_s < 0.9 * 600 or j.arrival_s == 0.0
+        assert j.arrival_s + j.duration_s <= 600 + 1e-9
+    # Standing services: arrive at t=0 and span the whole trace.
+    standing = [j for j in jobs if j.arrival_s == 0.0 and j.duration_s == 600.0]
+    assert standing
+
+
+def test_synth_trace_windows_partition_the_stream():
+    cur = synth_trace(TOPO, 600, seed=1, window_s=150)
+    assert cur.n_windows == 4
+    stitched = []
+    for lo, hi, jobs in cur.windows():
+        for j in jobs:
+            assert (lo <= j.arrival_s < hi) or (lo == 0 and j.arrival_s == 0.0)
+        stitched.extend(jobs)
+    assert job_tuples(stitched) == job_tuples(cur.jobs)
+
+
+def test_cursor_replay_bit_identical_to_materialized():
+    """Streamed admission must not change the simulation at all."""
+    cur = synth_trace(TOPO, 300, seed=0, window_s=60)
+    wl = materialize(cur)
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=300, seed=1)
+    for policy in ("random", "nomora"):
+        cfg = SimConfig(policy=policy, seed=2, fixed_algo_s=0.0)
+        a = Simulator(cur, plane, cfg).run()
+        b = Simulator(wl, plane, cfg).run()
+        assert a.tasks_placed == b.tasks_placed
+        assert a.placement_latency_s == b.placement_latency_s
+        assert a.response_time_s == b.response_time_s
+        assert a.per_job_perf == b.per_job_perf
+
+
+def test_task_table_grows_preserving_state_and_sentinels():
+    tt = TaskTable(capacity=4)
+    ids = tt.append_job(0, 3, submit_s=1.0)
+    tt.machine[ids] = 7
+    tt.append_job(1, 10, submit_s=2.0)  # forces growth
+    assert tt.capacity >= 13 and tt.n == 13
+    assert (tt.machine[ids] == 7).all()  # data preserved
+    assert (tt.machine[3:13] == -1).all()  # admitted rows get sentinels
+    assert (tt.start_s[tt.n :] == -1.0).all()  # unused rows keep sentinels
+    jt = JobTable(capacity=1)
+    for j in range(5):
+        jt.append(j, 10.0, 0, 2)
+    assert jt.n == 5 and (jt.root_machine[jt.n :] == -1).all()
+
+
+def test_simulator_survives_understated_hints():
+    """Size hints only affect preallocation; lowball them and replay."""
+    cur = synth_trace(TOPO, 240, seed=5, window_s=60)
+
+    class TinyHints:
+        topo = cur.topo
+        duration_s = cur.duration_s
+        n_jobs_hint = 1
+        n_tasks_hint = 1
+
+        @property
+        def jobs(self):
+            return cur.jobs
+
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=240, seed=1)
+    cfg = SimConfig(policy="random", seed=0, fixed_algo_s=0.0)
+    a = Simulator(TinyHints(), plane, cfg).run()
+    b = Simulator(materialize(cur), plane, cfg).run()
+    assert a.placement_latency_s == b.placement_latency_s
+    assert a.per_job_perf == b.per_job_perf
+
+
+# --------------------------------------------------------------------- #
+# Google cluster-data v2 ingestion
+
+
+def _write_task_events(path, rows, compress=False):
+    """rows: (time_us, job_id, task_index, event_type)."""
+    lines = []
+    for t_us, jid, ti, ev in rows:
+        row = [""] * 13
+        row[0], row[2], row[3], row[5] = str(t_us), str(jid), str(ti), str(ev)
+        lines.append(",".join(row))
+    data = ("\n".join(lines) + "\n").encode()
+    if compress:
+        with gzip.open(path, "wb") as f:
+            f.write(data)
+    else:
+        path.write_bytes(data)
+
+
+TRACE_ROWS = [
+    # job 1001: 3 tasks, submits at 5s, finishes at 65s
+    (5_000_000, 1001, 0, EVENT_SUBMIT),
+    (5_000_000, 1001, 1, EVENT_SUBMIT),
+    (5_000_000, 1001, 2, EVENT_SUBMIT),
+    (65_000_000, 1001, 0, EVENT_FINISH),
+    # job 42: 2 tasks, submits at 1s, never finishes (runs to trace end)
+    (1_000_000, 42, 0, EVENT_SUBMIT),
+    (1_000_000, 42, 1, EVENT_SUBMIT),
+    # job 7: single-task -> dropped (paper §6)
+    (2_000_000, 7, 0, EVENT_SUBMIT),
+]
+
+
+@pytest.mark.parametrize("compress", [False, True])
+def test_read_task_events(tmp_path, compress):
+    path = tmp_path / ("events.csv.gz" if compress else "events.csv")
+    _write_task_events(path, TRACE_ROWS, compress=compress)
+    jobs = read_task_events([str(path)], trace_duration_s=120)
+    # Dropped single-task job; arrival-sorted; ids renumbered densely.
+    assert [j.job_id for j in jobs] == [0, 1]
+    assert [j.n_tasks for j in jobs] == [2, 3]
+    assert jobs[0].arrival_s == 1.0 and jobs[1].arrival_s == 5.0
+    assert jobs[0].duration_s == 119.0  # unfinished: runs to trace end
+    assert jobs[1].duration_s == 60.0  # FINISH - SUBMIT
+    assert all(j.perf_idx in set(APP_MODEL_INDEX.values()) for j in jobs)
+    # Deterministic perf assignment (hash of the original job id).
+    again = read_task_events([str(path)], trace_duration_s=120)
+    assert job_tuples(jobs) == job_tuples(again)
+
+
+def test_csv_cursor_replays(tmp_path):
+    path = tmp_path / "events.csv"
+    _write_task_events(path, TRACE_ROWS)
+    cur = CsvTraceCursor(topo=TOPO, duration_s=120, paths=(str(path),))
+    assert job_tuples(cur.jobs) == job_tuples(cur.jobs)  # re-iterable
+    plane = latency.LatencyPlane.synthesize(TOPO, duration_s=120, seed=0)
+    metrics = Simulator(
+        cur, plane, SimConfig(policy="random", seed=0, fixed_algo_s=0.0)
+    ).run()
+    assert metrics.tasks_placed == 5  # 2 + 3 tasks, single-task job dropped
