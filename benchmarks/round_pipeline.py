@@ -1,4 +1,5 @@
-"""Host-numpy vs fused on-device scheduling round (ISSUE-2 acceptance).
+"""Host-numpy vs fused on-device scheduling round (ISSUE-2 acceptance),
+plus the cross-round window program (ISSUE-4 acceptance).
 
 Times one NoMora scheduling round at 256 / 1,000 / 4,000 machines, split
 into the two stages the refactor fuses:
@@ -11,13 +12,20 @@ into the two stages the refactor fuses:
   (numpy prep, re-upload) vs `solve_transportation_device` (device prep on
   the already-device cost arrays). Both run the production solver config
   (exact=False, tie_jitter=9) and place identically bit for bit.
+- ``window``: R scheduling rounds through the per-round `AuctionBackend`
+  (R Python round-trips: input staging, several dispatches, result syncs)
+  vs ONE `WindowedAuctionBackend.place_window` dispatch
+  (`round_program.RoundProgram`, `jax.lax.scan` across the window). Rounds
+  are trace-shaped — modest task counts against a large cluster — the
+  regime where fixed per-round dispatch overhead, not round math,
+  dominates (M=12,500 replays run one round per simulated second).
 
-The acceptance gate asserts the fused cost path is >= 2x the numpy path at
-1,000 machines — i.e. the round no longer pays the device->host->device
-trip of the (T, M) matrix. Results land in
-benchmarks/results/round_pipeline.json; regenerate deliberately before
-committing (1-core container: timings are indicative, the parity flag is
-the hard claim).
+Acceptance gates: the fused cost path is >= 2x the numpy path at 1,000
+machines, and the scanned window is >= 2x the per-round dispatch path at
+>= 4,000 machines (placements bit-identical in both comparisons). Results
+land in benchmarks/results/round_pipeline.json; regenerate deliberately
+before committing (1-core container: timings are indicative, the parity
+flags are the hard claims).
 """
 
 from __future__ import annotations
@@ -37,6 +45,13 @@ N_JOBS = 24
 SIZES = (256, 1_000, 4_000)
 REPEATS = 5
 SEED = 7
+
+# Cross-round window benchmark: trace-shaped rounds (small T, big M — the
+# 1s-cadence replay regime where per-round dispatch overhead dominates).
+WINDOW_ROUNDS = 16
+WINDOW_TASKS = 12
+WINDOW_JOBS = 3
+WINDOW_SIZES = (4_096,)
 
 
 def _round_state(rng, topo, n_tasks, n_jobs):
@@ -150,6 +165,59 @@ def bench_size(n_machines: int) -> dict:
     }
 
 
+def bench_window(n_machines: int) -> dict:
+    from repro.core import perf_model, policy, topology
+    from repro.core.scheduler_backend import (
+        AuctionBackend,
+        WindowedAuctionBackend,
+    )
+
+    topo = topology.Topology(
+        n_machines=n_machines,
+        machines_per_rack=48,
+        racks_per_pod=16,
+        slots_per_machine=4,
+    )
+    rng = np.random.default_rng(SEED)
+    states = [
+        _round_state(rng, topo, WINDOW_TASKS, WINDOW_JOBS)
+        for _ in range(WINDOW_ROUNDS)
+    ]
+    params = policy.PolicyParams(preemption=True)
+    lut = perf_model.perf_lut_table()
+    per_round = AuctionBackend(params, topo, lut, device=True)
+    windowed = WindowedAuctionBackend(params, topo, lut, device=True)
+
+    def dispatch_per_round():
+        return [per_round.place(s, None) for s in states]
+
+    def dispatch_window():
+        return windowed.place_window(states)
+
+    t_seq = _time(dispatch_per_round)
+    t_win = _time(dispatch_window)
+
+    seq, win = dispatch_per_round(), dispatch_window()
+    identical = all(
+        np.array_equal(a.cols, b.cols) and a.objective == b.objective
+        for a, b in zip(seq, win)
+    )
+    assert identical, f"window diverged from per-round path at M={n_machines}"
+
+    return {
+        "n_machines": n_machines,
+        "n_rounds": WINDOW_ROUNDS,
+        "n_tasks_per_round": WINDOW_TASKS,
+        "n_jobs_per_round": WINDOW_JOBS,
+        "per_round_ms": t_seq * 1e3,
+        "window_ms": t_win * 1e3,
+        "per_round_rounds_per_s": WINDOW_ROUNDS / t_seq,
+        "window_rounds_per_s": WINDOW_ROUNDS / t_win,
+        "window_speedup": t_seq / t_win,
+        "placements_bit_identical": identical,
+    }
+
+
 def run():
     rows = []
     payload = {"sizes": []}
@@ -170,19 +238,39 @@ def run():
                 f"{r['round_speedup']:.2f}x_host_{r['host_round_ms']:.2f}ms",
             )
         )
+    payload["windows"] = []
+    for n_machines in WINDOW_SIZES:
+        w = bench_window(n_machines)
+        payload["windows"].append(w)
+        rows.append(
+            (
+                f"round_window_m{n_machines}_r{w['n_rounds']}",
+                w["window_ms"] * 1e3,
+                f"{w['window_speedup']:.2f}x_per_round_{w['per_round_ms']:.2f}ms;"
+                f"{w['window_rounds_per_s']:.0f}rounds_per_s",
+            )
+        )
     gate = next(r for r in payload["sizes"] if r["n_machines"] == 1_000)
     payload["accept_cost_speedup_at_1000"] = gate["cost_speedup"]
+    wgate = payload["windows"][0]
+    payload["accept_window_speedup_at_4096"] = wgate["window_speedup"]
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
     with open(RESULTS_PATH, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
     rows.append(("round_pipeline_results_json", 0.0, os.path.relpath(RESULTS_PATH)))
-    # ISSUE-2 acceptance gate — the fused pipeline must beat the numpy
-    # dense_costs path >= 2x at 1,000 machines. Checked after the JSON
-    # lands so a timing-noise miss still keeps the measurements.
+    # Acceptance gates — checked after the JSON lands so a timing-noise
+    # miss still keeps the measurements. ISSUE-2: the fused pipeline must
+    # beat the numpy dense_costs path >= 2x at 1,000 machines.
     assert gate["cost_speedup"] >= 2.0, (
         f"fused cost path speedup {gate['cost_speedup']:.2f}x fell below "
         "the 2x acceptance floor at 1,000 machines"
+    )
+    # ISSUE-4: the scanned R-round window must beat R per-round dispatches
+    # >= 2x at >= 4,000 machines (multi-round dispatch overhead).
+    assert wgate["window_speedup"] >= 2.0, (
+        f"window speedup {wgate['window_speedup']:.2f}x fell below the 2x "
+        f"acceptance floor at {wgate['n_machines']} machines"
     )
     return rows
 

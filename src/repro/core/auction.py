@@ -53,7 +53,15 @@ PRICE_LOCK = jnp.float32(2.0**40)  # price of a slot beyond a machine's capacity
 _F32_EXACT = 2**24  # |ints| exactly representable in float32
 
 
-def _bucket(n: int, lo: int = 32) -> int:
+def _bucket(n: int, lo: int = 8) -> int:
+    """Power-of-two padding bucket with floor ``lo``.
+
+    The floor bounds retracing (one compilation per bucket per program);
+    8 keeps at most two extra compilations over the old floor of 32 while
+    letting the small rounds that dominate 1s-cadence trace replays run
+    (8, M)-shaped pipelines instead of (32, M) — a 4x cut in per-iteration
+    element traffic exactly where per-round dispatch overhead already
+    dominates."""
     b = lo
     while b < n:
         b *= 2
@@ -68,8 +76,7 @@ class AuctionResult:
     prices: np.ndarray  # (M, S) final slot prices (scaled units)
 
 
-@functools.partial(jax.jit, static_argnames=("max_iters",))
-def _auction_phase(
+def auction_phase_step(
     price,  # (M, S) f32 slot prices (scaled integer units)
     values_m,  # (T, M) f32 scaled values (-cost), NEG_VALUE forbidden
     value_u,  # (T,) f32 scaled value of the task's own unscheduled column
@@ -77,8 +84,21 @@ def _auction_phase(
     active,  # (T,) bool real (non-padding) tasks
     eps,  # f32 scalar
     max_iters: int,
+    *,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
 ):
+    """Pure auction phase: ``(price0, values, ...) -> (price, owner, assigned, iters)``.
+
+    Un-jitted and host-callback-free so `core.round_program.RoundProgram`
+    can trace it inside `jax.lax.scan` (a window of rounds) and `jax.vmap`
+    (the what-if axis); `_auction_phase` is the jitted standalone wrapper
+    the per-round solve paths call. All price/bid arithmetic is on exact
+    integer-valued float32, so results are bit-identical wherever the step
+    is inlined.
+    """
     T, M = values_m.shape
+    pallas = jax.default_backend() == "tpu" if use_pallas is None else use_pallas
     m_ids = jnp.arange(M, dtype=jnp.int32)
 
     owner = jnp.full((M, price.shape[1]), -1, jnp.int32)
@@ -94,7 +114,8 @@ def _auction_phase(
         price, owner, assigned, it = state
         unassigned = jnp.logical_and(assigned < 0, active)
 
-        # Per-machine cheapest and second-cheapest slot.
+        # Per-machine cheapest and second-cheapest slot. The equality mask
+        # fuses into the min reduction (a scatter would copy live `price`).
         slot_iota = jax.lax.broadcasted_iota(jnp.int32, price.shape, 1)
         price1 = jnp.min(price, axis=1)  # (M,)
         slot1 = jnp.argmin(price, axis=1).astype(jnp.int32)
@@ -102,7 +123,9 @@ def _auction_phase(
             jnp.where(slot_iota == slot1[:, None], PRICE_LOCK, price), axis=1
         )
 
-        best_m, best_v, second_v = bid_ops.bid_top2(values_m, price1, price2)
+        best_m, best_v, second_v = bid_ops.bid_top2_step(
+            values_m, price1, price2, use_pallas=pallas, interpret=interpret
+        )
 
         # Merge the task's own unscheduled offer (price pinned at 0).
         u_better = value_u > best_v
@@ -113,11 +136,49 @@ def _auction_phase(
         # Machine bid level: beat the runner-up offer by eps.
         bid_level = price1[best_m] + (best_v - second_for_machine) + eps
 
-        # Conflict resolution: max bid per machine (two-pass segment
-        # reduction; bid levels are integer-valued f32 so equality is exact),
-        # ties broken to the lowest task id.
+        # Conflict resolution: max bid per machine, ties broken to the
+        # lowest task id (bid levels are integer-valued f32 so equality is
+        # exact). Two bit-identical strategies, chosen statically by shape:
         t_ids = jnp.arange(T, dtype=jnp.int32)
         bids = jnp.where(bids_machine, bid_level, jnp.float32(-1.0))
+        if T * T <= 4 * M:
+            # T-space: a (T, T) same-machine dominance table. For the
+            # small rounds that dominate 1s-cadence replays this removes
+            # every O(M)-sized intermediate of the segment path (the
+            # pairwise table is tiny next to the (T, M) bid pass).
+            same_m = best_m[:, None] == best_m[None, :]
+            dominated = jnp.logical_or(
+                bids[None, :] > bids[:, None],
+                jnp.logical_and(
+                    bids[None, :] == bids[:, None],
+                    t_ids[None, :] < t_ids[:, None],
+                ),
+            )
+            loses = jnp.any(jnp.logical_and(same_m, dominated), axis=1)
+            winner = jnp.logical_and(bids_machine, jnp.logical_not(loses))
+            win_slot_t = slot1[best_m]
+            evicted_t = jnp.where(winner, owner[best_m, win_slot_t], -1)
+
+            # Per-machine winners are unique, so the T-sized scatters are
+            # duplicate-free; losers write to the OOB row M and drop.
+            win_m_t = jnp.where(winner, best_m, M)
+            price = price.at[win_m_t, win_slot_t].set(bids, mode="drop")
+            owner = owner.at[win_m_t, win_slot_t].set(t_ids, mode="drop")
+
+            # Evictees are disjoint from winners (winners were unassigned,
+            # evictees held a slot); -1 would wrap as a negative index, so
+            # remap to the positive OOB sentinel T before the drop-scatter.
+            evict_tgt = jnp.where(evicted_t >= 0, evicted_t, T)
+            evict_mark = (
+                jnp.zeros((T,), jnp.int32).at[evict_tgt].add(1, mode="drop")
+            )
+            assigned = jnp.where(evict_mark > 0, -1, assigned)
+            assigned = jnp.where(winner, best_m, assigned)
+            assigned = jnp.where(bids_unsched, job_col, assigned)
+            return price, owner, assigned, it + 1
+
+        # M-space: two-pass segment reduction over machines (big rounds,
+        # where a (T, T) table would dwarf the O(M) intermediates).
         win_bid = jax.ops.segment_max(bids, best_m, num_segments=M)
         has_winner = win_bid >= 0
         is_winner_cand = jnp.logical_and(bids_machine, bids == win_bid[best_m])
@@ -129,26 +190,25 @@ def _auction_phase(
 
         evicted = jnp.where(has_winner, owner[m_ids, win_slot], -1)
 
-        # Slot updates (per-machine, no duplicates).
-        price = price.at[m_ids, win_slot].set(
-            jnp.where(has_winner, win_bid, price[m_ids, win_slot])
-        )
-        owner = owner.at[m_ids, win_slot].set(
-            jnp.where(has_winner, win_task, owner[m_ids, win_slot])
-        )
+        # Slot updates (per-machine, no duplicates). Masked writes are
+        # expressed as out-of-bounds row indices with mode='drop' — one
+        # scatter each, no gather+select round trip, identical results.
+        win_m = jnp.where(has_winner, m_ids, M)
+        price = price.at[win_m, win_slot].set(win_bid, mode="drop")
+        owner = owner.at[win_m, win_slot].set(win_task, mode="drop")
 
         # Eviction marks (duplicate-safe add-scatter; winners and evictees
         # are disjoint: winners were unassigned, evictees held a slot).
-        evict_mark = jnp.zeros((T,), jnp.int32).at[
-            jnp.where(evicted >= 0, evicted, 0)
-        ].add(jnp.where(evicted >= 0, 1, 0))
+        # -1 would wrap like a normal negative index, so remap it to the
+        # positive OOB sentinel T before the dropping scatter.
+        evict_tgt = jnp.where(evicted >= 0, evicted, T)
+        evict_mark = jnp.zeros((T,), jnp.int32).at[evict_tgt].add(1, mode="drop")
 
         # Winner marks (each task bids on exactly one machine => no dups).
-        win_mark = jnp.zeros((T,), jnp.int32).at[win_task].add(
-            jnp.where(has_winner, 1, 0)
-        )
-        win_col = jnp.zeros((T,), jnp.int32).at[win_task].add(
-            jnp.where(has_winner, m_ids + 1, 0)
+        win_tgt = jnp.where(has_winner, win_task, T)
+        win_mark = jnp.zeros((T,), jnp.int32).at[win_tgt].add(1, mode="drop")
+        win_col = jnp.zeros((T,), jnp.int32).at[win_tgt].add(
+            m_ids + 1, mode="drop"
         )
 
         assigned = jnp.where(evict_mark > 0, -1, assigned)
@@ -160,6 +220,12 @@ def _auction_phase(
         cond, body, (price, owner, assigned, jnp.int32(0))
     )
     return price, owner, assigned, iters
+
+
+# Jitted standalone phase (the per-round solve paths).
+_auction_phase = functools.partial(
+    jax.jit, static_argnames=("max_iters", "use_pallas", "interpret")
+)(auction_phase_step)
 
 
 def solve_transportation(
@@ -306,16 +372,22 @@ def _jitter_device(n_rows: int, n_cols: int, tie_jitter: int) -> jnp.ndarray:
     return jnp.asarray(_jitter_matrix_np(n_rows, n_cols, tie_jitter))
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "n_slots"))
-def _prepare_device(
+def prepare_values_step(
     w_m,  # (Tp, M) i32 machine costs (INF_COST = no arc)
     a,  # (Tp,) i32 unscheduled costs
     jit_m,  # (Tp, M) i32 tie jitter
     active,  # (Tp,) bool
     capacity,  # (M,) i32 free slots
-    scale: int,
+    scale,  # i32 scalar (python int or traced; (T+1) in exact mode, else 1)
     n_slots: int,
 ):
+    """Pure solver-value prep: jitter, value scaling, zero-start prices.
+
+    The scan/vmap-compatible body of `_prepare_device`; ``scale`` may be a
+    traced scalar (the window program passes a per-round (T+1) when exact),
+    which is bit-identical to the static-int multiply the jitted wrapper
+    compiles in. ``n_slots`` shapes the price matrix and stays static.
+    """
     finite = w_m < INF_COST
     wj = jnp.where(finite, w_m + jit_m, w_m)  # int32; bound-checked by caller
     vm = jnp.where(
@@ -333,19 +405,27 @@ def _prepare_device(
     return vm, vu, price0, wj
 
 
-@jax.jit
-def _assignment_cost(wj, a, assigned, active):
+_prepare_device = functools.partial(
+    jax.jit, static_argnames=("scale", "n_slots")
+)(prepare_values_step)
+
+
+def assignment_cost_step(wj, a, assigned, active):
     """Per-task chosen arc cost (jittered machine cols / unsched), (Tp,) i32.
 
     Returned unsummed: the host accumulates in int64 (the device has no
     x64, and an on-device int32 sum could wrap for huge unscheduled costs
-    that individually still pass the float32-exactness guard).
+    that individually still pass the float32-exactness guard). Pure and
+    un-jitted so the window program can inline it per scanned round.
     """
     M = wj.shape[1]
     rows = jnp.arange(wj.shape[0])
     mcost = wj[rows, jnp.clip(assigned, 0, M - 1)]
     per_task = jnp.where(assigned < M, mcost, a)
     return jnp.where(active, per_task, 0)
+
+
+_assignment_cost = jax.jit(assignment_cost_step)
 
 
 def solve_transportation_device(

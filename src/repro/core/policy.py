@@ -60,6 +60,11 @@ from .topology import Topology
 
 INF_COST = np.int32(2**30)  # "no arc"
 
+# NoMora machine-arc costs are bounded by construction: perf is clipped to
+# >= 1e-2, so cost = round(10/p)*10 <= 10000 (perf_model.perf_to_cost).
+# The single source for every host-side float32-exactness guard.
+MAX_MACHINE_COST = 10_000
+
 
 @dataclasses.dataclass(frozen=True)
 class PolicyParams:
@@ -191,10 +196,27 @@ def dense_costs(
 # --- Fused on-device cost pipeline -----------------------------------------
 
 
-@functools.partial(
-    jax.jit, static_argnames=("per_rack", "use_pallas", "interpret")
-)
-def _device_cost_core(
+def apply_preemption_discount(w_m, cur_machine, run_s, preemption, beta_scale):
+    """Eq. 7: discount each running task's current-machine arc by beta.
+
+    One write per row at (t, cur) => no scatter conflicts. Pure and
+    un-jitted — the single implementation shared by `cost_round_step` and
+    the window program's round body (`core.round_program`), so the
+    per-round and scanned paths cannot diverge.
+    """
+    T = cur_machine.shape[0]
+    t_ids = jnp.arange(T, dtype=jnp.int32)
+    running = cur_machine >= 0
+    cur_safe = jnp.where(running, cur_machine, 0)
+    beta_pts = (run_s * beta_scale).astype(jnp.int32)
+    disc = jnp.maximum(1, w_m[t_ids, cur_safe] - beta_pts)
+    apply = jnp.logical_and(preemption, running)
+    return w_m.at[t_ids, cur_safe].set(
+        jnp.where(apply, disc, w_m[t_ids, cur_safe])
+    )
+
+
+def cost_round_step(
     lut_table,  # (n_models, LUT_SIZE) f32
     task_job,  # (T,) i32
     perf_idx,  # (T,) i32
@@ -213,7 +235,12 @@ def _device_cost_core(
     use_pallas: Optional[bool],
     interpret: bool,
 ):
-    """Eqs. 6-10 fused into one XLA program; outputs stay on device.
+    """Pure cost-model round step: Eqs. 6-10, ``inputs -> (w_m, a, d, c_rack, b)``.
+
+    Un-jitted and host-callback-free, so it can be traced inside
+    `jax.lax.scan` / `jax.vmap` bodies (`core.round_program.RoundProgram`
+    scans it across a window of scheduling rounds and vmaps it over what-if
+    parameter variants) as well as jitted standalone (`_device_cost_core`).
 
     Bit-compatible with the numpy `dense_costs` ops: all arithmetic is
     int32/float32 exactly as the host path computes it (numpy's weak-scalar
@@ -227,9 +254,11 @@ def _device_cost_core(
     T = task_job.shape[0]
     M = root_latency.shape[1]
 
+    # None = auto-select exactly like the `costmap` op does for host calls.
+    pallas = jax.default_backend() == "tpu" if use_pallas is None else use_pallas
     task_lat = root_latency[task_job]  # (T, M) gather, on device
-    d = costmap_ops.costmap(
-        lut_table, perf_idx, task_lat, use_pallas=use_pallas, interpret=interpret
+    d = costmap_ops.costmap_step(
+        lut_table, perf_idx, task_lat, use_pallas=pallas, interpret=interpret
     )  # (T, M) i32
 
     # Eq. 8: worst machine per rack (pad partial racks with 0; real costs
@@ -245,21 +274,19 @@ def _device_cost_core(
         d <= p_m, d, jnp.where(c_for_m <= p_r, c_for_m, b[:, None])
     ).astype(jnp.int32)
 
-    # Preemption (Eq. 7): discount each running task's current machine.
-    # One write per row at (t, cur) => no scatter conflicts.
-    t_ids = jnp.arange(T, dtype=jnp.int32)
-    running = cur_machine >= 0
-    cur_safe = jnp.where(running, cur_machine, 0)
-    beta_pts = (run_s * beta_scale).astype(jnp.int32)
-    disc = jnp.maximum(1, w_m[t_ids, cur_safe] - beta_pts)
-    apply = jnp.logical_and(preemption, running)
-    w_m = w_m.at[t_ids, cur_safe].set(
-        jnp.where(apply, disc, w_m[t_ids, cur_safe])
+    w_m = apply_preemption_discount(
+        w_m, cur_machine, run_s, preemption, beta_scale
     )
 
     # Eq. 10 unscheduled cost per task.
     a = (omega * wait_s + gamma).astype(jnp.int32)
     return w_m, a, d, c_rack, b
+
+
+# Jitted standalone round step (the per-round `AuctionBackend` path).
+_device_cost_core = functools.partial(
+    jax.jit, static_argnames=("per_rack", "use_pallas", "interpret")
+)(cost_round_step)
 
 
 def device_round_costs(

@@ -1,0 +1,521 @@
+"""Persistent device-resident round program: scan across scheduling rounds.
+
+PR 2 fused a *single* scheduling round into jitted device programs, but the
+replay loop still paid per-round dispatch: every round re-entered Python,
+re-staged padded inputs, launched several XLA programs, and synced results
+back before the next round could start. At Google-trace scale (M=12,500,
+one round per simulated second) that fixed per-round overhead — not the
+round math — dominates wall clock.
+
+This module keeps the round state *resident on device* and advances it with
+`jax.lax.scan` over a **window** of rounds in one dispatch:
+
+- `DeviceRoundState` — the fixed-shape, bucketed carry: free slots,
+  last-round slot prices, last-round assignment. Registered as a pytree so
+  the jitted window program can **donate** its buffers (the state is
+  consumed and rebuilt in place on backends that support donation; CPU
+  silently copies).
+- `RoundWindow` — one window's exogenous inputs, stacked `(R, ...)` on the
+  bucketed shapes `(Tp, Jp)` shared by every round of the window (built by
+  `stack_round_states` from per-round `policy.RoundState` records).
+- `RoundProgram` — compiles the window program once per bucket shape and
+  runs it: each scanned round inlines the *pure* step functions
+  (`policy.cost_round_step` → Eq. 7 preemption discount →
+  `auction.prepare_values_step` → `auction.auction_phase_step` →
+  `auction.assignment_cost_step`), so a window of R rounds is one XLA
+  dispatch with no host callbacks. Slot prices start from zero every round
+  (complementary slackness for the asymmetric problem — see auction.py;
+  the *carry* is cluster state, never warm prices).
+- the **what-if axis**: `RoundProgram.what_if` vmaps one round over K
+  stacked `PolicyParams` variants (e.g. preemption aggressiveness
+  ``beta_scale``, thresholds ``p_m``/``p_r``) and returns each variant's
+  placement plus its *true* (undiscounted, unjittered) cost in a single
+  dispatch — the primitive the paper's migration controller needs to pick
+  "a better placement" (§7).
+
+Slot-accounting modes (``chain_slots``):
+
+- ``False`` (exogenous): round ``r`` uses ``window.free_slots[r]`` exactly
+  as a sequential caller would pass it — the mode that is bit-identical to
+  R independent `AuctionBackend.place` calls.
+- ``True`` (chained): the carry's free slots advance on device — round
+  ``r`` uses ``carry + window.free_slots[r]`` (the per-round row is an
+  exogenous *delta*: admissions/retirements/mover reclaims), and the
+  placements of round ``r`` are debited before round ``r+1``. Bit-identical
+  to a sequential loop that applies the same slot accounting on host
+  between `place` calls (tests/test_policy_device.py).
+
+Bit-parity contract: for identical per-round inputs, every scanned round's
+assignment, iteration count, and objective are bit-identical to the
+per-round `policy.device_round_costs` + `auction.solve_transportation_device`
+path — same int32/float32 ops, same jitter matrix (hash of (row, col),
+shape-independent), same zero-start prices. The numpy `dense_costs` host
+path remains the parity oracle one level further down.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import auction, perf_model, policy
+from .policy import MAX_MACHINE_COST, PolicyParams, RoundState
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["free_slots", "prices", "assigned"],
+    meta_fields=[],
+)
+@dataclasses.dataclass
+class DeviceRoundState:
+    """Fixed-shape device-resident carry of the window scan.
+
+    ``free_slots`` is the live cluster occupancy (advanced in-scan under
+    ``chain_slots=True``); ``prices`` / ``assigned`` are the last scanned
+    round's final slot prices and assignment (diagnostics and warm-state
+    for consumers that want them — the next round's solve never reads
+    them, by the zero-start-price requirement).
+    """
+
+    free_slots: jnp.ndarray  # (M,) i32
+    prices: jnp.ndarray  # (M, S) f32
+    assigned: jnp.ndarray  # (Tp,) i32; -1 = no decision
+
+
+@dataclasses.dataclass
+class RoundWindow:
+    """One window's stacked exogenous inputs (host-built, fixed shapes).
+
+    ``free_slots`` rows are absolute per-round slot vectors under
+    ``chain_slots=False`` and per-round *deltas* under ``chain_slots=True``.
+    ``scale`` is the per-round auction cost scale ((T+1) exact, else 1).
+    ``n_tasks`` / ``wait_max`` stay on host for result slicing and the
+    float32-exactness guard.
+    """
+
+    task_job: np.ndarray  # (R, Tp) i32
+    perf_idx: np.ndarray  # (R, Tp) i32
+    root_latency: np.ndarray  # (R, Jp, M) f32
+    wait_s: np.ndarray  # (R, Tp) f32
+    run_s: np.ndarray  # (R, Tp) f32
+    cur_machine: np.ndarray  # (R, Tp) i32
+    active: np.ndarray  # (R, Tp) bool
+    free_slots: np.ndarray  # (R, M) i32 (absolute, or deltas when chained)
+    scale: np.ndarray  # (R,) i32
+    n_tasks: Tuple[int, ...]  # host: real task count per round
+    wait_max: Tuple[float, ...]  # host: max wait_s per round (cost bound)
+
+    @property
+    def n_rounds(self) -> int:
+        return int(self.task_job.shape[0])
+
+
+@dataclasses.dataclass
+class WindowResult:
+    """Host view of one `advance` window (padded rows still present)."""
+
+    assigned: np.ndarray  # (R, Tp) i32
+    iterations: np.ndarray  # (R,) i32
+    per_task_cost: np.ndarray  # (R, Tp) i32 (jittered, discounted)
+    per_task_true_cost: np.ndarray  # (R, Tp) i32 (no jitter, no discount)
+    n_tasks: Tuple[int, ...]
+
+    def round_cols(self, r: int) -> np.ndarray:
+        """Round ``r``'s assignment for its real tasks, (T_r,) int64."""
+        return self.assigned[r, : self.n_tasks[r]].astype(np.int64)
+
+    def round_objective(self, r: int) -> int:
+        """Round ``r``'s solver objective (jittered units, int64 on host)."""
+        return int(self.per_task_cost[r].astype(np.int64).sum())
+
+    def round_true_cost(self, r: int) -> int:
+        return int(self.per_task_true_cost[r].astype(np.int64).sum())
+
+
+@dataclasses.dataclass
+class WhatIfResult:
+    """K what-if variants of one round, from a single vmapped dispatch."""
+
+    assigned: np.ndarray  # (K, Tp) i32
+    iterations: np.ndarray  # (K,) i32
+    per_task_cost: np.ndarray  # (K, Tp) i32
+    per_task_true_cost: np.ndarray  # (K, Tp) i32
+    n_tasks: int
+
+    @property
+    def true_costs(self) -> np.ndarray:
+        """(K,) total undiscounted cost per variant — the migration
+        controller's ranking key ("pick a better placement")."""
+        return self.per_task_true_cost.astype(np.int64).sum(axis=1)
+
+    def best_variant(self) -> int:
+        """Lowest true-cost variant (ties -> lowest index, deterministic)."""
+        return int(np.argmin(self.true_costs))
+
+    def variant_cols(self, k: int) -> np.ndarray:
+        return self.assigned[k, : self.n_tasks].astype(np.int64)
+
+
+def _pad_params(params_seq: Sequence[PolicyParams]) -> dict:
+    """Stack K PolicyParams into (K,) device scalars for the vmap axis."""
+    return dict(
+        p_m=jnp.asarray([np.int32(p.p_m) for p in params_seq]),
+        p_r=jnp.asarray([np.int32(p.p_r) for p in params_seq]),
+        omega=jnp.asarray([np.float32(p.omega) for p in params_seq]),
+        gamma=jnp.asarray([np.float32(p.gamma) for p in params_seq]),
+        preemption=jnp.asarray([bool(p.preemption) for p in params_seq]),
+        beta_scale=jnp.asarray([np.float32(p.beta_scale) for p in params_seq]),
+    )
+
+
+def stack_round_states(
+    states: Sequence[RoundState],
+    *,
+    n_pad_tasks: int,
+    n_pad_jobs: int,
+    exact: bool = False,
+) -> RoundWindow:
+    """Pad each round to the window's (Tp, Jp) bucket and stack along R.
+
+    Mirrors `policy.device_round_costs`'s padding exactly (task_job/perf
+    pads to 0, cur_machine to -1, latency rows to 0) so real rows are
+    bit-identical to the per-round path regardless of bucket size.
+    """
+    R = len(states)
+    if R == 0:
+        raise ValueError("empty round window")
+    Tp, Jp = n_pad_tasks, n_pad_jobs
+    M = states[0].n_machines
+    out = RoundWindow(
+        task_job=np.zeros((R, Tp), np.int32),
+        perf_idx=np.zeros((R, Tp), np.int32),
+        root_latency=np.zeros((R, Jp, M), np.float32),
+        wait_s=np.zeros((R, Tp), np.float32),
+        run_s=np.zeros((R, Tp), np.float32),
+        cur_machine=np.full((R, Tp), -1, np.int32),
+        active=np.zeros((R, Tp), bool),
+        free_slots=np.zeros((R, M), np.int32),
+        scale=np.ones((R,), np.int32),
+        n_tasks=tuple(s.n_tasks for s in states),
+        wait_max=tuple(
+            float(s.wait_s.max(initial=0.0)) for s in states
+        ),
+    )
+    for r, s in enumerate(states):
+        T, J = s.n_tasks, s.n_jobs
+        if T > Tp or J > Jp:
+            raise ValueError(
+                f"round {r} ({T} tasks, {J} jobs) exceeds the window bucket "
+                f"({Tp}, {Jp})"
+            )
+        if s.n_machines != M:
+            raise ValueError("all rounds in a window must share the cluster")
+        out.task_job[r, :T] = s.task_job
+        out.perf_idx[r, :T] = s.perf_idx
+        out.root_latency[r, :J] = s.root_latency
+        out.wait_s[r, :T] = s.wait_s
+        out.run_s[r, :T] = s.run_s
+        out.cur_machine[r, :T] = s.cur_machine
+        out.active[r, :T] = True
+        out.free_slots[r] = s.free_slots.astype(np.int32)
+        out.scale[r] = np.int32(T + 1 if exact else 1)
+    return out
+
+
+class RoundProgram:
+    """Compiled persistent window program for one (Tp, Jp, M) bucket.
+
+    Holds the device-resident round-invariant inputs (perf LUT, tie-jitter
+    matrix) and the jitted scan/vmap programs; `advance` consumes and
+    returns a `DeviceRoundState` (donated where the backend supports it),
+    `what_if` fans one round out over K `PolicyParams` variants.
+    """
+
+    def __init__(
+        self,
+        topo,
+        params: PolicyParams,
+        lut_table: Optional[jnp.ndarray] = None,
+        *,
+        n_pad_tasks: int,
+        n_pad_jobs: int,
+        slots_per_machine: Optional[int] = None,
+        tie_jitter: int = 9,
+        exact: bool = False,
+        eps: float = 1.0,
+        max_iters: int = 500_000,
+        chain_slots: bool = False,
+        use_pallas: Optional[bool] = None,
+        interpret: bool = False,
+    ):
+        self.topo = topo
+        self.params = params
+        self.n_pad_tasks = int(n_pad_tasks)
+        self.n_pad_jobs = int(n_pad_jobs)
+        self.n_machines = int(topo.n_machines)
+        self.n_slots = int(slots_per_machine or topo.slots_per_machine)
+        self.tie_jitter = int(tie_jitter)
+        self.exact = bool(exact)
+        self.eps = float(eps)
+        self.max_iters = int(max_iters)
+        self.chain_slots = bool(chain_slots)
+        self.use_pallas = use_pallas
+        self.interpret = interpret
+        self.lut = perf_model.perf_lut_table() if lut_table is None else lut_table
+        # Device-resident, shape-keyed: one upload per program, not per round.
+        self.jitter = auction._jitter_device(
+            self.n_pad_tasks, self.n_machines, self.tie_jitter
+        )
+        # Buffer donation keeps the carry in place across windows; CPU has
+        # no donation support, so skip it there to avoid per-call warnings.
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        self._advance_jit = jax.jit(
+            self._advance_impl, donate_argnums=donate
+        )
+        self._whatif_jit = jax.jit(self._whatif_impl)
+
+    # ------------------------------------------------------------------ #
+
+    def init_state(self, free_slots: np.ndarray) -> DeviceRoundState:
+        """Fresh device state from the host's slot-occupancy view."""
+        return DeviceRoundState(
+            free_slots=jnp.asarray(free_slots.astype(np.int32)),
+            prices=jnp.zeros((self.n_machines, self.n_slots), jnp.float32),
+            assigned=jnp.full((self.n_pad_tasks,), -1, jnp.int32),
+        )
+
+    def _round_body(
+        self, free_slots, inputs, *, p_m, p_r, omega, gamma, preemption,
+        beta_scale, scale,
+    ):
+        """One scheduling round on device: pure, scan/vmap-compatible.
+
+        Returns ``(price, assigned, iters, per_task_cost, per_task_true)``.
+        The Eq. 7 preemption discount is applied *here*, on top of the
+        undiscounted `policy.cost_round_step` output, so the true
+        (performance-only) cost of every placement is available to the
+        what-if axis without a second cost build — through the same
+        `policy.apply_preemption_discount` the per-round path inlines.
+        """
+        (task_job, perf_idx, root_lat, wait_s, run_s, cur_machine, active) = inputs
+        M = self.n_machines
+        w_base, a, _d, _c_rack, _b = policy.cost_round_step(
+            self.lut,
+            task_job,
+            perf_idx,
+            root_lat,
+            wait_s,
+            run_s,
+            cur_machine,
+            p_m,
+            p_r,
+            omega,
+            gamma,
+            jnp.bool_(False),  # discount applied below, on w_base
+            beta_scale,
+            per_rack=self.topo.machines_per_rack,
+            use_pallas=self.use_pallas,
+            interpret=self.interpret,
+        )
+        w_m = policy.apply_preemption_discount(
+            w_base, cur_machine, run_s, preemption, beta_scale
+        )
+
+        job_col = jnp.where(active, M + task_job, M).astype(jnp.int32)
+        vm, vu, price0, wj = auction.prepare_values_step(
+            w_m, a, self.jitter, active, free_slots, scale, self.n_slots
+        )
+        price, _owner, assigned, iters = auction.auction_phase_step(
+            price0,
+            vm,
+            vu,
+            job_col,
+            active,
+            jnp.float32(self.eps),
+            self.max_iters,
+            use_pallas=self.use_pallas,
+            interpret=self.interpret,
+        )
+        per_task_cost = auction.assignment_cost_step(wj, a, assigned, active)
+        per_task_true = auction.assignment_cost_step(w_base, a, assigned, active)
+        return price, assigned, iters, per_task_cost, per_task_true
+
+    def _consumed(self, assigned, active):
+        """(M,) slots debited by one round's placements (duplicate-safe)."""
+        placed = jnp.logical_and(
+            active, jnp.logical_and(assigned >= 0, assigned < self.n_machines)
+        )
+        return (
+            jnp.zeros((self.n_machines,), jnp.int32)
+            .at[jnp.clip(assigned, 0, self.n_machines - 1)]
+            .add(placed.astype(jnp.int32))
+        )
+
+    def _advance_impl(self, state, window_arrays, params_scalars):
+        def body(carry, per_round):
+            (task_job, perf_idx, root_lat, wait_s, run_s, cur_machine,
+             active, slots_in, scale) = per_round
+            # Exogenous mode: each round's slots come from its window row,
+            # as a sequential caller would pass them. Chained mode: the
+            # row is a delta on the device-carried occupancy.
+            free_slots = (
+                carry.free_slots + slots_in if self.chain_slots else slots_in
+            )
+            price, assigned, iters, cost, true_cost = self._round_body(
+                free_slots,
+                (task_job, perf_idx, root_lat, wait_s, run_s, cur_machine,
+                 active),
+                scale=scale,
+                **params_scalars,
+            )
+            new_carry = DeviceRoundState(
+                free_slots=free_slots - self._consumed(assigned, active),
+                prices=price,
+                assigned=assigned,
+            )
+            return new_carry, (assigned, iters, cost, true_cost)
+
+        return jax.lax.scan(body, state, window_arrays)
+
+    def _whatif_impl(self, free_slots, round_arrays, variant_params, scale):
+        def one(vp):
+            _price, assigned, iters, cost, true_cost = self._round_body(
+                free_slots, round_arrays, scale=scale, **vp
+            )
+            return assigned, iters, cost, true_cost
+
+        return jax.vmap(one)(variant_params)
+
+    # ------------------------------------------------------------------ #
+
+    def _check_cost_bound(
+        self, window: RoundWindow, variants: Optional[Sequence[PolicyParams]] = None
+    ) -> None:
+        """Host-side float32-exactness guard (no device sync), mirroring
+        `auction.solve_transportation_device`'s check — per round, and per
+        what-if variant when ``variants`` is given."""
+        for params in variants if variants is not None else (self.params,):
+            for r in range(window.n_rounds):
+                a_max = int(params.omega * window.wait_max[r] + params.gamma) + 1
+                bound = max(MAX_MACHINE_COST, a_max)
+                scale = int(window.scale[r])
+                if (
+                    (bound + max(self.tie_jitter - 1, 0)) * scale * 4
+                    >= auction._F32_EXACT
+                ):
+                    raise ValueError(
+                        f"scaled costs exceed float32-exact range in round {r}: "
+                        f"{bound} * {scale} * 4 >= 2^24"
+                    )
+
+    def _window_arrays(self, window: RoundWindow):
+        return (
+            jnp.asarray(window.task_job),
+            jnp.asarray(window.perf_idx),
+            jnp.asarray(window.root_latency),
+            jnp.asarray(window.wait_s),
+            jnp.asarray(window.run_s),
+            jnp.asarray(window.cur_machine),
+            jnp.asarray(window.active),
+            jnp.asarray(window.free_slots),
+            jnp.asarray(window.scale),
+        )
+
+    def _params_scalars(self, params: PolicyParams) -> dict:
+        return dict(
+            p_m=jnp.int32(params.p_m),
+            p_r=jnp.int32(params.p_r),
+            omega=jnp.float32(params.omega),
+            gamma=jnp.float32(params.gamma),
+            preemption=jnp.bool_(params.preemption),
+            beta_scale=jnp.float32(params.beta_scale),
+        )
+
+    def advance(
+        self, state: DeviceRoundState, window: RoundWindow
+    ) -> Tuple[DeviceRoundState, WindowResult]:
+        """Scan the window's rounds through the device-resident state.
+
+        One dispatch for all R rounds; the input ``state`` is consumed
+        (donated on supporting backends) and the advanced state returned.
+        Host-side validation (convergence, iteration caps, float32 cost
+        bounds) happens around the dispatch, never inside it.
+        """
+        self._check_cost_bound(window)
+        new_state, (assigned, iters, cost, true_cost) = self._advance_jit(
+            state, self._window_arrays(window), self._params_scalars(self.params)
+        )
+        iters_np = np.asarray(iters)
+        if int(iters_np.max(initial=0)) >= self.max_iters:
+            raise RuntimeError(
+                f"auction hit the iteration cap ({self.max_iters}) inside the window"
+            )
+        assigned_np = np.asarray(assigned)
+        for r, T in enumerate(window.n_tasks):
+            if (assigned_np[r, :T] < 0).any():
+                raise RuntimeError(
+                    f"auction did not converge in round {r}: unassigned tasks remain"
+                )
+        return new_state, WindowResult(
+            assigned=assigned_np,
+            iterations=iters_np,
+            per_task_cost=np.asarray(cost),
+            per_task_true_cost=np.asarray(true_cost),
+            n_tasks=window.n_tasks,
+        )
+
+    def what_if(
+        self,
+        state: RoundState,
+        variants: Sequence[PolicyParams],
+    ) -> WhatIfResult:
+        """Evaluate K candidate parameterisations of one round in ONE
+        dispatch (vmapped what-if axis).
+
+        Each variant's placement is bit-identical to running that round
+        through the per-round pipeline with the variant's `PolicyParams`
+        (vmap of the auction while_loop freezes converged lanes, so lanes
+        are independent). Rank variants with `WhatIfResult.true_costs` —
+        total cost with no preemption discount and no tie jitter, i.e. pure
+        expected application performance of the resulting placement.
+        """
+        if not variants:
+            raise ValueError("what_if needs at least one PolicyParams variant")
+        window = stack_round_states(
+            [state],
+            n_pad_tasks=self.n_pad_tasks,
+            n_pad_jobs=self.n_pad_jobs,
+            exact=self.exact,
+        )
+        self._check_cost_bound(window, variants)
+        scale = int(window.scale[0])
+        arrs = self._window_arrays(window)
+        round_arrays = tuple(a[0] for a in arrs[:7])
+        free_slots = arrs[7][0]
+        assigned, iters, cost, true_cost = self._whatif_jit(
+            free_slots, round_arrays, _pad_params(variants), jnp.int32(scale)
+        )
+        iters_np = np.asarray(iters)
+        if int(iters_np.max(initial=0)) >= self.max_iters:
+            raise RuntimeError(
+                f"auction hit the iteration cap ({self.max_iters}) in a what-if lane"
+            )
+        assigned_np = np.asarray(assigned)
+        T = window.n_tasks[0]
+        if (assigned_np[:, :T] < 0).any():
+            raise RuntimeError(
+                "auction did not converge in a what-if lane: unassigned tasks remain"
+            )
+        return WhatIfResult(
+            assigned=assigned_np,
+            iterations=iters_np,
+            per_task_cost=np.asarray(cost),
+            per_task_true_cost=np.asarray(true_cost),
+            n_tasks=T,
+        )

@@ -23,6 +23,11 @@ Backends:
   crosses the host↔device boundary. ``auction_host`` is the same solver
   through the numpy `dense_costs` reference — kept as the parity oracle,
   bit-identical placements (tests/test_policy_device.py).
+- `WindowedAuctionBackend` (``auction_windowed``) — the same round math
+  through the persistent device-resident `core.round_program.RoundProgram`:
+  `place` is an R=1 window (bit-identical to ``auction``), `place_window`
+  scans R staged rounds in one dispatch, `place_whatif` vmaps K parameter
+  variants of one round (the migration controller's what-if axis).
 - `MCMFBackend` (``mcmf``) — the paper-faithful Quincy graph through the
   SSP min-cost-max-flow reference solver.
 - `RandomBackend` / `LoadSpreadingBackend` (``random``/``load_spreading``)
@@ -47,6 +52,7 @@ import numpy as np
 from . import auction, flow_network, mcmf, perf_model
 from .policy import (
     INF_COST,
+    MAX_MACHINE_COST,
     PolicyParams,
     RoundState,
     dense_costs,
@@ -55,10 +61,6 @@ from .policy import (
     random_placement,
 )
 from .topology import Topology
-
-# NoMora machine-arc costs are bounded by construction: perf is clipped to
-# >= 1e-2, so cost = round(10/p)*10 <= 10000 (see perf_model.perf_to_cost).
-_MAX_MACHINE_COST = 10_000
 
 
 @dataclasses.dataclass
@@ -273,12 +275,171 @@ class AuctionBackend(SchedulerBackend):
             slots_per_machine=self.topo.slots_per_machine,
             tie_jitter=self.tie_jitter,
             exact=self.exact,
-            cost_bound=max(_MAX_MACHINE_COST, a_max),
+            cost_bound=max(MAX_MACHINE_COST, a_max),
         )
         return Placement(
             cols=np.asarray(res.assigned_col, np.int64),
             algo_s=time.perf_counter() - t0,
             objective=res.total_cost,
+        )
+
+
+class WindowedAuctionBackend(AuctionBackend):
+    """NoMora round through the persistent device-resident `RoundProgram`.
+
+    The same cost model and auction solver as ``auction``, but the whole
+    round — cost build, value prep, solve, objective — is one compiled
+    window program whose round-invariant inputs (perf LUT, tie-jitter
+    matrix) and state buffers stay resident on device across calls
+    (donated where the backend supports donation). Three entry points:
+
+    - `place` — `SchedulerBackend` contract, one round per call (an R=1
+      window through the same scanned program): bit-identical placements
+      to ``auction``, so the simulator's admission/migration/straggler
+      cadence is untouched. ``algo_s`` covers the fused dispatch (cost +
+      solve are one program and cannot be clocked separately — slightly
+      *over*-counts solver time relative to the ``auction`` backend's
+      solve-only clock).
+    - `place_window` — R rounds in ONE dispatch (`jax.lax.scan`), for
+      callers that can stage a window of round inputs up front (replay
+      drivers, benchmarks); per-round results are bit-identical to R
+      sequential `place` calls. ``chain`` threads slot consumption
+      through the window on device (round r+1 sees round r's placements).
+    - `place_whatif` — the vmapped what-if axis: K `PolicyParams`
+      variants of one round in one dispatch, returning the placement of
+      the variant with the lowest *true* (undiscounted) cost — the
+      migration controller's "pick a better placement" primitive (§7).
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        if not self.device:
+            raise ValueError("WindowedAuctionBackend is device-only")
+        self.name = "auction_windowed"
+        self._programs: dict = {}  # (Tp, Jp, chain) -> RoundProgram
+        self._states: dict = {}  # (Tp, Jp, chain) -> DeviceRoundState
+
+    def _program(self, n_tasks: int, n_jobs: int, *, chain: bool = False):
+        from .round_program import RoundProgram
+
+        key = (auction._bucket(n_tasks), auction._bucket(n_jobs, 8), chain)
+        prog = self._programs.get(key)
+        if prog is None:
+            prog = self._programs[key] = RoundProgram(
+                self.topo,
+                self.params,
+                self.lut,
+                n_pad_tasks=key[0],
+                n_pad_jobs=key[1],
+                slots_per_machine=self.topo.slots_per_machine,
+                tie_jitter=self.tie_jitter,
+                exact=self.exact,
+                chain_slots=chain,
+                use_pallas=self.use_pallas,
+                interpret=self.interpret,
+            )
+        return key, prog
+
+    def _state_for(self, key, prog, free_slots):
+        """Per-bucket persistent carry; rebuilt only on first use (its
+        buffers are donated back by every `advance`). The entry is
+        *popped*: `advance` donates the carry's buffers into the dispatch,
+        so if it raises (iteration cap, convergence) a cached reference
+        would hand deleted arrays to the next call on this bucket — the
+        caller re-caches the advanced state on success instead."""
+        st = self._states.pop(key, None)
+        if st is None:
+            st = prog.init_state(free_slots)
+        return st
+
+    def place(self, state: RoundState, ctx: RoundContext) -> Placement:
+        from .round_program import stack_round_states
+
+        key, prog = self._program(state.n_tasks, state.n_jobs)
+        window = stack_round_states(
+            [state],
+            n_pad_tasks=prog.n_pad_tasks,
+            n_pad_jobs=prog.n_pad_jobs,
+            exact=self.exact,
+        )
+        dstate = self._state_for(key, prog, state.free_slots)
+        t0 = time.perf_counter()
+        dstate, res = prog.advance(dstate, window)
+        algo_s = time.perf_counter() - t0
+        self._states[key] = dstate
+        return Placement(
+            cols=res.round_cols(0),
+            algo_s=algo_s,
+            objective=res.round_objective(0),
+        )
+
+    def place_window(
+        self, states, ctx: Optional[RoundContext] = None, *, chain: bool = False
+    ):
+        """Solve R staged rounds in one scanned dispatch.
+
+        ``chain=False``: every round uses its own ``free_slots`` exactly as
+        R sequential `place` calls would (bit-identical). ``chain=True``:
+        round 0 starts from ``states[0].free_slots`` and later rounds'
+        ``free_slots`` fields are treated as per-round *deltas* on the
+        device-carried occupancy (see `round_program.RoundProgram`).
+        Returns a list of `Placement`.
+        """
+        from .round_program import stack_round_states
+
+        if not states:
+            return []
+        key, prog = self._program(
+            max(s.n_tasks for s in states),
+            max(s.n_jobs for s in states),
+            chain=chain,
+        )
+        window = stack_round_states(
+            states,
+            n_pad_tasks=prog.n_pad_tasks,
+            n_pad_jobs=prog.n_pad_jobs,
+            exact=self.exact,
+        )
+        if chain:
+            # Round 0's row becomes the delta on the freshly-seeded carry.
+            dstate = prog.init_state(states[0].free_slots)
+            window.free_slots[0] = 0
+        else:
+            dstate = self._state_for(key, prog, states[0].free_slots)
+        t0 = time.perf_counter()
+        dstate, res = prog.advance(dstate, window)
+        algo_s = (time.perf_counter() - t0) / len(states)
+        if not chain:
+            # Chained windows seed a fresh carry per call; caching theirs
+            # would just pin device buffers nothing ever reads again.
+            self._states[key] = dstate
+        return [
+            Placement(
+                cols=res.round_cols(r),
+                algo_s=algo_s,
+                objective=res.round_objective(r),
+            )
+            for r in range(len(states))
+        ]
+
+    def place_whatif(
+        self, state: RoundState, ctx: RoundContext, variants
+    ) -> Placement:
+        """One round under K `PolicyParams` variants, one dispatch; returns
+        the placement of the variant with the lowest true (undiscounted)
+        cost. With a single variant this is `place` under that variant's
+        params, bit for bit."""
+        _key, prog = self._program(state.n_tasks, state.n_jobs)
+        t0 = time.perf_counter()
+        res = prog.what_if(state, list(variants))
+        algo_s = time.perf_counter() - t0
+        best = res.best_variant()
+        return Placement(
+            cols=res.variant_cols(best),
+            algo_s=algo_s,
+            objective=int(
+                res.per_task_cost[best].astype(np.int64).sum()
+            ),
         )
 
 
@@ -311,6 +472,7 @@ class MCMFBackend(SchedulerBackend):
 
 BACKEND_NAMES = (
     "auction",
+    "auction_windowed",
     "auction_host",
     "mcmf",
     "random",
@@ -337,6 +499,8 @@ def make_backend(
         return SpreadSolverBackend(params, topo)
     if name == "auction":
         return AuctionBackend(params, topo, lut_table, device=True)
+    if name == "auction_windowed":
+        return WindowedAuctionBackend(params, topo, lut_table, device=True)
     if name == "auction_host":
         return AuctionBackend(params, topo, lut_table, device=False)
     if name == "mcmf":

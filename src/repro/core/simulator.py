@@ -129,6 +129,13 @@ class SimConfig:
     # With streaming metrics, keep a bounded per-job reservoir of this many
     # perf samples (0 = means only) for distributional spot checks.
     perf_reservoir_k: int = 0
+    # What-if migration (paper §7 "pick a better placement"): candidate
+    # beta_scale values evaluated per migration/straggler round through the
+    # backend's vmapped what-if axis (one dispatch for all variants); the
+    # variant whose placement has the lowest *true* (undiscounted) cost is
+    # applied. Empty = regular single-solve rounds (the parity default).
+    # Requires a backend with `place_whatif` (``auction_windowed``).
+    whatif_betas: tuple = ()
 
 
 class Simulator:
@@ -177,6 +184,11 @@ class Simulator:
         self.pending: np.ndarray = EMPTY_IDS  # non-root task ids, queue order
         self.running: np.ndarray = EMPTY_IDS  # placed task ids, start order
         self.backend = backend_for_config(config, self.topo, self.lut)
+        if config.whatif_betas and not hasattr(self.backend, "place_whatif"):
+            raise ValueError(
+                f"whatif_betas requires a backend with a what-if axis "
+                f"(auction_windowed), got {self.backend.name!r}"
+            )
         self.dead: set = set()  # failed machines
         self.dead_mask = np.zeros(M, bool)
         self._failures = sorted(config.failures)
@@ -355,6 +367,16 @@ class Simulator:
             newly = (~self.jt.done[:jn]) & (self.jt.unfinished[:jn] == 0)
             if newly.any():
                 self.jt.done[:jn] |= newly
+                # Retire straggler-detector state with the job: done jobs
+                # are never sampled again (the _sample_perf mask excludes
+                # them), so dropping their EWMA/counter entries is
+                # semantics-neutral and keeps the detector O(live jobs)
+                # instead of O(all jobs ever) on multi-week replays.
+                # (_straggler_jobs itself is cleared every straggler round
+                # and must keep done jobs until then — seed semantics.)
+                if self.straggler is not None:
+                    for j in np.nonzero(newly)[0]:
+                        self.straggler.forget(int(self.jt.job_id[j]))
 
     def _start_batch(
         self, ids: np.ndarray, machines: np.ndarray, t: float, algo_s: float
@@ -518,7 +540,23 @@ class Simulator:
         ctx = RoundContext(
             rng=self.rng, task_counts=self.task_counts, n_ready=len(ready_ids)
         )
-        placement = backend.place(state, ctx)
+        # What-if migration rounds: evaluate K preemption-aggressiveness
+        # (beta) variants in one vmapped dispatch and apply the placement
+        # with the best true (undiscounted) cost. Off by default; the
+        # single-solve path below stays the bit-parity reference.
+        if (
+            migration_round
+            and cfg.whatif_betas
+            and len(mover_ids)
+            and hasattr(backend, "place_whatif")
+        ):
+            variants = [
+                dataclasses.replace(cfg.params, beta_scale=b)
+                for b in cfg.whatif_betas
+            ]
+            placement = backend.place_whatif(state, ctx, variants)
+        else:
+            placement = backend.place(state, ctx)
         algo_s = self._algo_s(placement.algo_s)
         self.metrics.algo_runtime_s.append(algo_s)
         self.metrics.rounds += 1

@@ -42,5 +42,15 @@ class StragglerDetector:
         return [j for j, n in self._below.items() if n >= self.patience]
 
     def clear(self, job_id: int) -> None:
-        self._below[job_id] = 0
+        """Reset a flagged job's trigger state (identical observe/flagged
+        behaviour to a zeroed counter, but without retaining the key)."""
+        self._below.pop(job_id, None)
         self._ewma.pop(job_id, None)
+
+    def forget(self, job_id: int) -> None:
+        """Drop all state for a finished job. Without this, multi-week
+        streaming replays accumulate one EWMA + counter entry per job ever
+        sampled — unbounded growth the bounded-metrics path is supposed to
+        rule out (the simulator calls this as jobs complete)."""
+        self._ewma.pop(job_id, None)
+        self._below.pop(job_id, None)

@@ -24,6 +24,27 @@ def bid_top2(
     return _bid_top2_jnp(values, price1, price2)
 
 
+def bid_top2_step(
+    values: jnp.ndarray,
+    price1: jnp.ndarray,
+    price2: jnp.ndarray,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = False,
+):
+    """Scan-compatible `bid_top2`: pure, un-jitted, no host callbacks.
+
+    Safe to trace inside `jax.lax.scan` / `jax.vmap` bodies (the
+    cross-round `RoundProgram` auction phase): path selection is static,
+    there is no nested `jax.jit` boundary, and donated buffers of the
+    enclosing program stay donatable. Identical math to `bid_top2` for a
+    given path selection.
+    """
+    if use_pallas:
+        return kernel.bid_top2_pallas(values, price1, price2, interpret=interpret)
+    return ref.bid_top2_ref(values, price1, price2)
+
+
 @jax.jit
 def _bid_top2_jnp(values, price1, price2):
     return ref.bid_top2_ref(values, price1, price2)

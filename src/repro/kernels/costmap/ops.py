@@ -34,6 +34,28 @@ def costmap(
     return _costmap_jnp(lut_table, perf_idx, latency_us)
 
 
+def costmap_step(
+    lut_table: jnp.ndarray,
+    perf_idx: jnp.ndarray,
+    latency_us: jnp.ndarray,
+    *,
+    use_pallas: bool = False,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Scan-compatible `costmap`: pure, un-jitted, no host callbacks.
+
+    Safe to trace inside `jax.lax.scan` / `jax.vmap` bodies (the
+    cross-round `RoundProgram`): path selection is resolved at trace time
+    from the static ``use_pallas`` flag, there is no nested `jax.jit`
+    boundary, and every output is a function of the traced operands only —
+    so donated input buffers stay donatable in the enclosing program.
+    Identical math to `costmap` for a given path selection.
+    """
+    if use_pallas:
+        return kernel.costmap_pallas(perf_idx, latency_us, interpret=interpret)
+    return ref.costmap_ref(lut_table, perf_idx, latency_us)
+
+
 @jax.jit
 def _costmap_jnp(lut_table, perf_idx, latency_us):
     return ref.costmap_ref(lut_table, perf_idx, latency_us)

@@ -265,3 +265,72 @@ def test_simulator_streaming_vs_exact_tolerance():
         else:
             # counts, means, maxima: float-tolerance agreement
             np.testing.assert_allclose(b, a, rtol=1e-6, atol=1e-9, err_msg=k)
+
+
+def test_streaming_replay_keeps_bounded_accumulators():
+    """Multi-week-replay guard: under ``streaming_metrics=True`` a
+    migration- and straggler-heavy replay must leave no unbounded
+    per-round Python lists or per-dead-job state behind — every series
+    (including ``migrated_pct_per_round``) is a bounded `StreamSeries`,
+    and the straggler detector only retains state for still-live jobs."""
+    from repro.core import latency, topology
+    from repro.core.policy import PolicyParams
+    from repro.core.simulator import SimConfig, Simulator
+    from repro.core.workload import synth_workload
+
+    topo = topology.Topology(
+        n_machines=48, machines_per_rack=8, racks_per_pod=2, slots_per_machine=4
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=180, seed=2)
+    wl = synth_workload(topo, duration_s=180, seed=3, target_utilisation=0.5)
+    cfg = SimConfig(
+        policy="nomora",
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+        straggler_threshold=0.99,
+        perf_sample_interval_s=10,
+        migration_interval_s=30,
+        seed=4,
+        fixed_algo_s=0.0,
+        streaming_metrics=True,
+    )
+    sim = Simulator(wl, plane, cfg)
+    m = sim.run()
+    for name in (
+        "algo_runtime_s",
+        "placement_latency_s",
+        "response_time_s",
+        "migrated_pct_per_round",
+    ):
+        series = getattr(m, name)
+        assert isinstance(series, StreamSeries), name
+        assert not isinstance(series, list), name
+    # Rounds ran and migration percentages streamed into the histogram,
+    # not a list (len() counts samples without holding them).
+    assert m.rounds > 0
+    assert len(m.migrated_pct_per_round) >= 0
+    # Straggler state is retired with its job: done jobs hold no EWMA or
+    # below-threshold counters (pre-fix these dicts grew O(jobs) forever).
+    done_ids = {
+        int(sim.jt.job_id[j]) for j in range(sim.jt.n) if sim.jt.done[j]
+    }
+    assert done_ids, "replay should complete some jobs"
+    assert not (set(sim.straggler._ewma) & done_ids)
+    assert not (set(sim.straggler._below) & done_ids)
+
+
+def test_straggler_detector_clear_and_forget_drop_keys():
+    from repro.distributed.straggler import StragglerDetector
+
+    det = StragglerDetector(threshold=0.9, patience=2)
+    flagged = False
+    for _ in range(3):
+        flagged = det.observe(7, 0.5) or flagged
+    assert flagged and 7 in det._ewma and 7 in det._below
+    det.clear(7)
+    assert 7 not in det._ewma and 7 not in det._below
+    # observe() after clear behaves exactly like a zeroed counter.
+    assert not det.observe(7, 0.5)
+    assert det.observe(7, 0.5)
+    det.forget(7)
+    assert 7 not in det._ewma and 7 not in det._below
+    assert det.flagged() == []

@@ -177,8 +177,9 @@ def test_backend_equivalence_auction_vs_mcmf(seed):
 
 
 def test_simulator_device_and_host_backends_bit_identical():
-    """Full replays through backend='auction' vs 'auction_host' emit
-    identical metrics — the fused round is a drop-in for the numpy one."""
+    """Full replays through backend='auction' vs 'auction_host' vs the
+    persistent windowed program emit identical metrics — the fused and the
+    device-resident rounds are drop-ins for the numpy one."""
     from repro.core.workload import synth_workload
 
     topo = topology.Topology(
@@ -187,20 +188,220 @@ def test_simulator_device_and_host_backends_bit_identical():
     plane = latency.LatencyPlane.synthesize(topo, duration_s=90, seed=1)
     wl = synth_workload(topo, duration_s=90, seed=1, target_utilisation=0.6)
     metrics = {}
-    for backend in ("auction", "auction_host"):
+    for backend in ("auction", "auction_host", "auction_windowed"):
         cfg = SimConfig(
             policy="nomora", backend=backend, seed=5, fixed_algo_s=0.0,
             params=policy.PolicyParams(preemption=True, beta_scale=0.0),
             migration_interval_s=30,
         )
         metrics[backend] = Simulator(wl, plane, cfg).run()
-    a, b = metrics["auction"], metrics["auction_host"]
-    assert a.tasks_placed == b.tasks_placed
-    assert a.tasks_migrated == b.tasks_migrated
-    assert a.rounds == b.rounds
-    assert a.placement_latency_s == b.placement_latency_s
-    assert a.response_time_s == b.response_time_s
-    assert a.per_job_perf == b.per_job_perf
+    a = metrics["auction"]
+    for other in ("auction_host", "auction_windowed"):
+        b = metrics[other]
+        assert a.tasks_placed == b.tasks_placed, other
+        assert a.tasks_migrated == b.tasks_migrated, other
+        assert a.rounds == b.rounds, other
+        assert a.placement_latency_s == b.placement_latency_s, other
+        assert a.response_time_s == b.response_time_s, other
+        assert a.per_job_perf == b.per_job_perf, other
+
+
+# --- Persistent device-resident round program (cross-round scan) ---------- #
+
+
+def _window_states(rng, topo, R, free_slots_per_round=None, preempt=False):
+    """R random rounds against one cluster (varying T/J per round)."""
+    states = []
+    for r in range(R):
+        T = int(rng.integers(4, 20))
+        J = int(rng.integers(1, 4))
+        s = _state(rng, topo, T=T, J=J, preempt_running=preempt)
+        if free_slots_per_round is not None:
+            s.free_slots = free_slots_per_round[r].astype(np.int32)
+        states.append(s)
+    return states
+
+
+@pytest.mark.parametrize(
+    "solver_kw",
+    [dict(tie_jitter=9, exact=False), dict(tie_jitter=0, exact=True)],
+    ids=["production", "exact"],
+)
+@pytest.mark.parametrize("preempt", [False, True], ids=["nopre", "pre"])
+def test_window_scan_bit_identical_to_sequential_rounds(solver_kw, preempt):
+    """A scanned R-round window == R sequential per-round auction rounds,
+    bit for bit (assignments, objectives, iteration counts) — the tentpole
+    parity pin for `round_program.RoundProgram.advance`."""
+    from repro.core.round_program import RoundProgram, stack_round_states
+
+    rng = np.random.default_rng(7)
+    topo = TOPO_PARTIAL
+    R, Tp, Jp = 6, 32, 8
+    states = _window_states(rng, topo, R, preempt=preempt)
+    params = policy.PolicyParams(preemption=preempt)
+
+    prog = RoundProgram(
+        topo, params, LUT, n_pad_tasks=Tp, n_pad_jobs=Jp,
+        slots_per_machine=topo.slots_per_machine, **solver_kw, **_COSTMAP_KW,
+    )
+    window = stack_round_states(
+        states, n_pad_tasks=Tp, n_pad_jobs=Jp, exact=solver_kw["exact"]
+    )
+    _, res = prog.advance(prog.init_state(states[0].free_slots), window)
+
+    for r, s in enumerate(states):
+        w_m, a, *_ = policy.device_round_costs(
+            s, topo, params, LUT, n_pad_tasks=Tp, n_pad_jobs=Jp, **_COSTMAP_KW
+        )
+        ref = auction.solve_transportation_device(
+            w_m, a, s.n_tasks, s.free_slots, topo.n_machines, s.task_job,
+            slots_per_machine=topo.slots_per_machine, **solver_kw,
+        )
+        assert np.array_equal(res.round_cols(r), ref.assigned_col), r
+        assert res.round_objective(r) == ref.total_cost, r
+        assert int(res.iterations[r]) == ref.iterations, r
+
+
+def test_window_scan_chained_slots_matches_host_accounting():
+    """chain_slots=True: the device-carried occupancy (debited by each
+    round's placements, credited by per-round deltas) reproduces a host
+    loop that applies the same slot accounting between sequential calls."""
+    from repro.core.round_program import RoundProgram, stack_round_states
+
+    rng = np.random.default_rng(11)
+    topo = TOPO_FULL
+    M = topo.n_machines
+    R, Tp, Jp = 5, 32, 8
+    free0 = rng.integers(1, 4, size=M).astype(np.int32)
+    # Per-round exogenous deltas (retirements); round 0's row is consumed
+    # as a delta on the seeded carry by place_window/advance contract.
+    deltas = [np.zeros(M, np.int32)]
+    for _ in range(R - 1):
+        d = np.zeros(M, np.int32)
+        d[rng.integers(0, M, size=3)] += 1
+        deltas.append(d)
+    states = _window_states(rng, topo, R, free_slots_per_round=deltas)
+    params = policy.PolicyParams()
+
+    prog = RoundProgram(
+        topo, params, LUT, n_pad_tasks=Tp, n_pad_jobs=Jp,
+        slots_per_machine=topo.slots_per_machine, tie_jitter=9, exact=False,
+        chain_slots=True, **_COSTMAP_KW,
+    )
+    window = stack_round_states(states, n_pad_tasks=Tp, n_pad_jobs=Jp)
+    st, res = prog.advance(prog.init_state(free0), window)
+
+    free = free0.copy()
+    for r, s in enumerate(states):
+        free = free + deltas[r]
+        s.free_slots = free.copy().astype(np.int32)
+        w_m, a, *_ = policy.device_round_costs(
+            s, topo, params, LUT, n_pad_tasks=Tp, n_pad_jobs=Jp, **_COSTMAP_KW
+        )
+        ref = auction.solve_transportation_device(
+            w_m, a, s.n_tasks, s.free_slots, M, s.task_job,
+            slots_per_machine=topo.slots_per_machine, tie_jitter=9, exact=False,
+        )
+        assert np.array_equal(res.round_cols(r), ref.assigned_col), r
+        cols = ref.assigned_col
+        np.subtract.at(free, cols[cols < M], 1)
+    assert np.array_equal(np.asarray(st.free_slots), free)
+
+
+def test_whatif_variants_bit_identical_to_per_round_calls():
+    """The vmapped what-if axis: each of K `PolicyParams` lanes equals the
+    per-round pipeline run standalone under that variant, and the ranking
+    key (true cost) is minimised by the chosen variant."""
+    from repro.core.round_program import RoundProgram
+
+    rng = np.random.default_rng(13)
+    topo = TOPO_PARTIAL
+    state = _state(rng, topo, T=14, J=3, preempt_running=True)
+    base = policy.PolicyParams(preemption=True)
+    variants = [
+        policy.PolicyParams(preemption=True, beta_scale=b)
+        for b in (0.0, 100.0 / 3600.0, 400.0 / 3600.0)
+    ] + [policy.PolicyParams(p_m=120, p_r=125)]
+    Tp, Jp = 32, 8
+    prog = RoundProgram(
+        topo, base, LUT, n_pad_tasks=Tp, n_pad_jobs=Jp,
+        slots_per_machine=topo.slots_per_machine, tie_jitter=9, exact=False,
+        **_COSTMAP_KW,
+    )
+    res = prog.what_if(state, variants)
+    for k, p in enumerate(variants):
+        w_m, a, *_ = policy.device_round_costs(
+            state, topo, p, LUT, n_pad_tasks=Tp, n_pad_jobs=Jp, **_COSTMAP_KW
+        )
+        ref = auction.solve_transportation_device(
+            w_m, a, state.n_tasks, state.free_slots, topo.n_machines,
+            state.task_job, slots_per_machine=topo.slots_per_machine,
+            tie_jitter=9, exact=False,
+        )
+        assert np.array_equal(res.variant_cols(k), ref.assigned_col), k
+        assert (
+            int(res.per_task_cost[k, : state.n_tasks].astype(np.int64).sum())
+            == ref.total_cost
+        ), k
+    best = res.best_variant()
+    assert res.true_costs[best] == res.true_costs.min()
+
+
+def test_windowed_backend_place_and_window_match_auction():
+    """`WindowedAuctionBackend.place` == `AuctionBackend.place` per round,
+    and `place_window` == the same R rounds placed sequentially."""
+    from repro.core.scheduler_backend import WindowedAuctionBackend
+
+    rng = np.random.default_rng(17)
+    topo = TOPO_PARTIAL
+    params = policy.PolicyParams(preemption=True)
+    ctx = RoundContext(
+        rng=np.random.default_rng(0),
+        task_counts=np.zeros(topo.n_machines, np.int64),
+        n_ready=0,
+    )
+    per_round = AuctionBackend(params, topo, LUT, device=True, **_COSTMAP_KW)
+    windowed = WindowedAuctionBackend(params, topo, LUT, device=True, **_COSTMAP_KW)
+    states = _window_states(rng, topo, 4, preempt=True)
+    for s in states:
+        pa = per_round.place(s, ctx)
+        pw = windowed.place(s, ctx)
+        assert np.array_equal(pa.cols, pw.cols)
+        assert pa.objective == pw.objective
+    batched = windowed.place_window(states)
+    for s, p in zip(states, batched):
+        ref = per_round.place(s, ctx)
+        assert np.array_equal(ref.cols, p.cols)
+        assert ref.objective == p.objective
+
+
+def test_simulator_whatif_single_variant_matches_base():
+    """whatif_betas with one variant equal to the configured beta is a
+    no-op: the what-if dispatch returns the base placement bit for bit."""
+    from repro.core.workload import synth_workload
+
+    topo = topology.Topology(
+        n_machines=32, machines_per_rack=8, racks_per_pod=2, slots_per_machine=4
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=90, seed=1)
+    wl = synth_workload(topo, duration_s=90, seed=1, target_utilisation=0.6)
+
+    def run(whatif_betas):
+        cfg = SimConfig(
+            policy="nomora", backend="auction_windowed", seed=5,
+            fixed_algo_s=0.0,
+            params=policy.PolicyParams(preemption=True, beta_scale=0.0),
+            migration_interval_s=30, whatif_betas=whatif_betas,
+        )
+        return Simulator(wl, plane, cfg).run()
+
+    base, single = run(()), run((0.0,))
+    assert base.tasks_placed == single.tasks_placed
+    assert base.tasks_migrated == single.tasks_migrated
+    assert base.per_job_perf == single.per_job_perf
+    # Multiple variants run through one dispatch and stay a valid replay.
+    multi = run((0.0, 100.0 / 3600.0, 400.0 / 3600.0))
+    assert multi.tasks_placed == base.tasks_placed
 
 
 def test_make_backend_names_and_config_resolution():
