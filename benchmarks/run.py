@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures covered:
   Fig. 5  placement_quality  - average application performance areas
   Fig. 6  algo_runtime       - solver runtime per round
   Fig. 7  migrations         - migrated-task percentage (preemption)
+  (extra) migration_quality  - controller vs no-migration on dynamic planes
   Fig. 8  placement_latency  - submission -> placement latency
   Fig. 9  response_time      - submission -> completion
   (extra) sweep_bench        - SoA engine speedup + multi-scenario sweep
@@ -25,6 +26,7 @@ def main() -> None:
     from . import (
         algo_runtime,
         kernel_bench,
+        migration_quality,
         migrations,
         perf_models,
         placement_latency,
@@ -40,6 +42,7 @@ def main() -> None:
         ("placement_quality", placement_quality),
         ("algo_runtime", algo_runtime),
         ("migrations", migrations),
+        ("migration_quality", migration_quality),
         ("placement_latency", placement_latency),
         ("response_time", response_time),
         ("sweep_bench", sweep_bench),

@@ -1,0 +1,156 @@
+"""Device-resident latency oracle: per-round incremental plane updates.
+
+The simulator needs (J, M) root-to-machine RTT rows every scheduling round.
+Rebuilding them on host and shipping J*M floats per round is exactly the
+host round-trip the on-device round program exists to avoid. This oracle
+exploits the plane's hash-derived pair structure to keep the per-round
+upload tiny and constant-size:
+
+- *static per root* (uploaded once per (machine, regime-epoch), LRU-cached):
+  the decomposition ``(sel, coeff)`` from `LatencyPlane.row_decomposition` —
+  flat indices into the per-second series column plus float32 pair
+  coefficients;
+- *per second* (the only recurring upload): the flattened series column
+  ``series[:, :, t]`` (N_TIERS * TRACES_PER_TIER = 24 floats) and the rack
+  hotspot multipliers (n_racks floats, all-ones when no hotspot is active).
+
+On device the row is the same pure-f32 product chain as the host path
+(`LatencyPlane.latency_rows`): ``(series_t[sel] * coeff) * max(mult_a,
+mult_b)`` with the same-machine override — multiplies and gathers only, so
+host and device round identically and tests pin them bit-for-bit.
+
+Upload accounting is tracked in `stats()` so the migration-quality
+benchmark can assert the plane updates stay incremental (per-round floats
+~ 24 + n_racks + J, not J * M).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import auction
+from .latency import SAME_MACHINE_RTT_US, TRACES_PER_TIER, LatencyPlane
+from .topology import N_TIERS
+
+# Per-(machine, epoch) decompositions are 2*M entries each; 4096 of them
+# covers every root of a 4k-machine cluster across a regime shift.
+_DECOMP_CACHE_MAX = 4096
+
+
+@jax.jit
+def _rows_kernel(sel, coeff, roots, series_t, rack_mult, rack_of):
+    """(Jp, M) f32 RTT rows from per-root decompositions.
+
+    Same operation order as the host path: gather * coeff, then the
+    hotspot multiplier, then the same-machine override. Pure products —
+    no adds for XLA to contract into FMAs — so results are bit-identical
+    to numpy f32.
+    """
+    lat = series_t[sel] * coeff  # (Jp, M)
+    mult = jnp.maximum(rack_mult[rack_of][None, :], rack_mult[rack_of[roots]][:, None])
+    lat = lat * mult
+    same = jnp.arange(rack_of.shape[0], dtype=jnp.int32)[None, :] == roots[:, None]
+    return jnp.where(same, jnp.float32(SAME_MACHINE_RTT_US), lat)
+
+
+class DeviceLatencyOracle:
+    """Incremental device-side view of a (possibly dynamic) LatencyPlane."""
+
+    def __init__(self, plane: LatencyPlane):
+        self.plane = plane
+        self._rack_of = jnp.asarray(
+            np.asarray(plane.topo.rack_of(np.arange(plane.topo.n_machines)), np.int32)
+        )
+        self._ones_mult = jnp.ones(plane.topo.n_racks, jnp.float32)
+        # (machine, epoch) -> (sel_dev, coeff_dev), LRU.
+        self._decomp: "OrderedDict[Tuple[int, int], Tuple[jax.Array, jax.Array]]" = (
+            OrderedDict()
+        )
+        self._second: Optional[Tuple[int, jax.Array, jax.Array]] = None
+        # Upload accounting for the device-residency gate.
+        self.round_uploads = 0
+        self.uploaded_floats = 0
+        self.decomp_builds = 0
+        self.decomp_floats = 0
+        self.rows_served = 0  # (root, M) rows produced on device
+
+    # ------------------------------------------------------------------ #
+
+    def _decomposition(self, machine: int, epoch: int):
+        key = (machine, epoch)
+        hit = self._decomp.get(key)
+        if hit is not None:
+            self._decomp.move_to_end(key)
+            return hit
+        sel, coeff = self.plane.row_decomposition(machine, epoch)
+        dev = (jnp.asarray(sel), jnp.asarray(coeff))
+        self._decomp[key] = dev
+        self.decomp_builds += 1
+        self.decomp_floats += 2 * sel.shape[0]
+        while len(self._decomp) > _DECOMP_CACHE_MAX:
+            self._decomp.popitem(last=False)
+        return dev
+
+    def _second_arrays(self, t: int):
+        """Per-second upload: 24-float series column + rack multipliers."""
+        tt = self.plane._time_index(t)
+        if self._second is not None and self._second[0] == tt:
+            return self._second[1], self._second[2]
+        col = np.ascontiguousarray(
+            self.plane.series[:, :, tt].reshape(N_TIERS * TRACES_PER_TIER)
+        )
+        series_t = jnp.asarray(col)
+        rmult = self.plane.rack_multipliers(t)
+        mult_dev = self._ones_mult if rmult is None else jnp.asarray(rmult)
+        self.round_uploads += 1
+        self.uploaded_floats += col.shape[0] + (
+            0 if rmult is None else rmult.shape[0]
+        )
+        self._second = (tt, series_t, mult_dev)
+        return series_t, mult_dev
+
+    # ------------------------------------------------------------------ #
+
+    def root_rows(self, machines: Sequence[int], t) -> jax.Array:
+        """(J, M) float32 RTT rows, bit-identical to
+        ``plane.latency_rows(machines, t)`` (as a device array)."""
+        roots = np.asarray(machines, np.int64).reshape(-1)
+        n_jobs = roots.shape[0]
+        epoch = self.plane.regime_epoch(t)
+        series_t, mult_dev = self._second_arrays(t)
+        jp = auction._bucket(n_jobs, lo=8)
+        padded = np.empty(jp, np.int64)
+        padded[:n_jobs] = roots
+        padded[n_jobs:] = roots[0] if n_jobs else 0
+        decomps = [self._decomposition(int(m), epoch) for m in padded]
+        sel = jnp.stack([d[0] for d in decomps])
+        coeff = jnp.stack([d[1] for d in decomps])
+        roots_dev = jnp.asarray(padded.astype(np.int32))
+        self.uploaded_floats += jp  # root index vector
+        self.rows_served += n_jobs
+        rows = _rows_kernel(sel, coeff, roots_dev, series_t, mult_dev, self._rack_of)
+        # Stays a jax.Array: `stack_round_states` scatters device rows with
+        # a device-side .at[].set, so the (J, M) block never lands on host.
+        return rows[:n_jobs]
+
+    def stats(self) -> dict:
+        """Upload accounting (floats shipped host->device)."""
+        n_machines = self.plane.topo.n_machines
+        return {
+            "round_uploads": self.round_uploads,
+            "uploaded_floats": self.uploaded_floats,
+            "decomp_builds": self.decomp_builds,
+            "decomp_floats": self.decomp_floats,
+            "rows_served": self.rows_served,
+            # What a host rebuild would have shipped: every served row is
+            # M floats.
+            "naive_floats": self.rows_served * n_machines,
+            "floats_per_round": (
+                self.uploaded_floats / self.round_uploads if self.round_uploads else 0.0
+            ),
+        }

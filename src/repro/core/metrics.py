@@ -51,9 +51,18 @@ class SimMetrics:
     placement_latency_s: List[float] = dataclasses.field(default_factory=list)
     response_time_s: List[float] = dataclasses.field(default_factory=list)
     migrated_pct_per_round: List[float] = dataclasses.field(default_factory=list)
+    # Migration-controller quality series (empty unless the continuous
+    # controller runs): per controller round, the predicted true-cost
+    # improvement of the chosen lane over the all-frozen baseline, and the
+    # number of QoS-degraded jobs the round considered.
+    controller_improvement_per_round: List[float] = dataclasses.field(
+        default_factory=list
+    )
+    degraded_jobs_per_round: List[float] = dataclasses.field(default_factory=list)
     tasks_placed: int = 0
     tasks_migrated: int = 0
     rounds: int = 0
+    controller_rounds: int = 0
 
     def record_perf_sample(self, job_id: int, perf: float) -> None:
         self.per_job_perf.setdefault(job_id, []).append(perf)
@@ -71,12 +80,15 @@ class SimMetrics:
             "tasks_placed": float(self.tasks_placed),
             "tasks_migrated": float(self.tasks_migrated),
             "rounds": float(self.rounds),
+            "controller_rounds": float(self.controller_rounds),
         }
         for name, series in (
             ("algo_runtime_s", self.algo_runtime_s),
             ("placement_latency_s", self.placement_latency_s),
             ("response_time_s", self.response_time_s),
             ("migrated_pct", self.migrated_pct_per_round),
+            ("controller_improvement", self.controller_improvement_per_round),
+            ("degraded_jobs", self.degraded_jobs_per_round),
         ):
             for k, v in percentiles(series).items():
                 out[f"{name}_{k}"] = v

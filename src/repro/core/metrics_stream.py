@@ -394,9 +394,12 @@ class StreamingSimMetrics:
         self.placement_latency_s = StreamSeries()
         self.response_time_s = StreamSeries()
         self.migrated_pct_per_round = StreamSeries()
+        self.controller_improvement_per_round = StreamSeries()
+        self.degraded_jobs_per_round = StreamSeries()
         self.tasks_placed = 0
         self.tasks_migrated = 0
         self.rounds = 0
+        self.controller_rounds = 0
         self.reservoir_k = int(reservoir_k)
         self._seed = int(seed)
         self._job_count = np.zeros(0, np.int64)
@@ -468,11 +471,14 @@ class StreamingSimMetrics:
             "placement_latency_s",
             "response_time_s",
             "migrated_pct_per_round",
+            "controller_improvement_per_round",
+            "degraded_jobs_per_round",
         ):
             getattr(self, name).merge(getattr(other, name))
         self.tasks_placed += other.tasks_placed
         self.tasks_migrated += other.tasks_migrated
         self.rounds += other.rounds
+        self.controller_rounds += other.controller_rounds
         if len(other._job_count):
             self._ensure_jobs(len(other._job_count) - 1)
             oc = np.zeros_like(self._job_count)
@@ -502,12 +508,15 @@ class StreamingSimMetrics:
             "tasks_placed": float(self.tasks_placed),
             "tasks_migrated": float(self.tasks_migrated),
             "rounds": float(self.rounds),
+            "controller_rounds": float(self.controller_rounds),
         }
         for name, series in (
             ("algo_runtime_s", self.algo_runtime_s),
             ("placement_latency_s", self.placement_latency_s),
             ("response_time_s", self.response_time_s),
             ("migrated_pct", self.migrated_pct_per_round),
+            ("controller_improvement", self.controller_improvement_per_round),
+            ("degraded_jobs", self.degraded_jobs_per_round),
         ):
             for k, v in series.summary().items():
                 out[f"{name}_{k}"] = v

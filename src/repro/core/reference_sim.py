@@ -312,6 +312,17 @@ class ReferenceSimulator:
             movers = movers[: min(cfg.max_round_tasks, 512)]
             self._straggler_jobs.clear()
         if not ready and not movers:
+            # A migration round with zero eligible movers still samples the
+            # migrated-percentage series (0%) — mirrors the engine, keeping
+            # the series aligned with the migration cadence. Solver
+            # baselines never record migration metrics (their branch below
+            # returns before the record, and the engine's backends report
+            # supports_migration=False).
+            if migration_round and cfg.policy not in (
+                "random_solver",
+                "spread_solver",
+            ):
+                self.metrics.migrated_pct_per_round.append(0.0)
             return
 
         state = self._build_round_state(ready, movers, t)
@@ -385,8 +396,12 @@ class ReferenceSimulator:
                     self.metrics.tasks_migrated += 1
                 # col == unscheduled for a running task: keep it running
                 # (eviction-to-idle is never profitable under Eq. 10 costs).
-        if migration_round and n_running:
-            self.metrics.migrated_pct_per_round.append(100.0 * n_migrated / n_running)
+        if migration_round:
+            # 0.0 when no movers were eligible — every migration round
+            # contributes exactly one sample (engine parity).
+            self.metrics.migrated_pct_per_round.append(
+                100.0 * n_migrated / n_running if n_running else 0.0
+            )
 
     # ------------------------------------------------------------------ #
 

@@ -31,7 +31,12 @@ This module keeps the round state *resident on device* and advances it with
   ``beta_scale``, thresholds ``p_m``/``p_r``) and returns each variant's
   placement plus its *true* (undiscounted, unjittered) cost in a single
   dispatch — the primitive the paper's migration controller needs to pick
-  "a better placement" (§7).
+  "a better placement" (§7). Variants may additionally carry a per-task
+  **mover mask** (``active_masks``): rows masked out of a lane are frozen
+  in place — they keep their current machine (its slot is re-debited from
+  the lane's free slots on device) and contribute their *stay* cost to the
+  lane outcome, so "migrate only this subset" hypotheses are comparable
+  with full-migration hypotheses on total true cost.
 
 Slot-accounting modes (``chain_slots``):
 
@@ -146,13 +151,33 @@ class WhatIfResult:
     iterations: np.ndarray  # (K,) i32
     per_task_cost: np.ndarray  # (K, Tp) i32
     per_task_true_cost: np.ndarray  # (K, Tp) i32
+    # Undiscounted cost of every task *staying put* (running tasks on
+    # their current machine, pending tasks unscheduled) — the comparison
+    # baseline for masked lanes and the controller's improvement ranking.
+    per_task_stay_cost: np.ndarray  # (K, Tp) i32
     n_tasks: int
+    # The per-lane mover masks the lanes ran under (all-True without
+    # explicit masks); frozen rows' `assigned` is meaningless.
+    active_masks: Optional[np.ndarray] = None  # (K, Tp) bool
 
     @property
     def true_costs(self) -> np.ndarray:
         """(K,) total undiscounted cost per variant — the migration
         controller's ranking key ("pick a better placement")."""
         return self.per_task_true_cost.astype(np.int64).sum(axis=1)
+
+    def lane_outcomes(self) -> np.ndarray:
+        """(K,) total true cost of each lane's *overall* outcome: solved
+        rows contribute their placement's true cost, frozen rows their
+        stay cost. Comparable across lanes with different mover masks
+        (every lane sums over the same task set)."""
+        T = self.n_tasks
+        true_c = self.per_task_true_cost[:, :T].astype(np.int64)
+        stay_c = self.per_task_stay_cost[:, :T].astype(np.int64)
+        if self.active_masks is None:
+            return true_c.sum(axis=1)
+        masks = self.active_masks[:, :T]
+        return np.where(masks, true_c, stay_c).sum(axis=1)
 
     def best_variant(self) -> int:
         """Lowest true-cost variant (ties -> lowest index, deterministic)."""
@@ -207,6 +232,11 @@ def stack_round_states(
             float(s.wait_s.max(initial=0.0)) for s in states
         ),
     )
+    # Device-resident latency rows (DeviceLatencyOracle) stay on device:
+    # a numpy setitem would silently sync+download them, so scatter into a
+    # device buffer instead (after shape validation below) and hand
+    # `_window_arrays` the jax array as-is.
+    device_latency = isinstance(states[0].root_latency, jax.Array)
     for r, s in enumerate(states):
         T, J = s.n_tasks, s.n_jobs
         if T > Tp or J > Jp:
@@ -218,13 +248,19 @@ def stack_round_states(
             raise ValueError("all rounds in a window must share the cluster")
         out.task_job[r, :T] = s.task_job
         out.perf_idx[r, :T] = s.perf_idx
-        out.root_latency[r, :J] = s.root_latency
+        if not device_latency:
+            out.root_latency[r, :J] = s.root_latency
         out.wait_s[r, :T] = s.wait_s
         out.run_s[r, :T] = s.run_s
         out.cur_machine[r, :T] = s.cur_machine
         out.active[r, :T] = True
         out.free_slots[r] = s.free_slots.astype(np.int32)
         out.scale[r] = np.int32(T + 1 if exact else 1)
+    if device_latency:
+        rl = jnp.zeros((R, Jp, M), jnp.float32)
+        for r, s in enumerate(states):
+            rl = rl.at[r, : s.n_jobs].set(s.root_latency)
+        out.root_latency = rl
     return out
 
 
@@ -292,16 +328,21 @@ class RoundProgram:
 
     def _round_body(
         self, free_slots, inputs, *, p_m, p_r, omega, gamma, preemption,
-        beta_scale, scale,
+        beta_scale, scale, stay_active=None,
     ):
         """One scheduling round on device: pure, scan/vmap-compatible.
 
-        Returns ``(price, assigned, iters, per_task_cost, per_task_true)``.
-        The Eq. 7 preemption discount is applied *here*, on top of the
-        undiscounted `policy.cost_round_step` output, so the true
-        (performance-only) cost of every placement is available to the
+        Returns ``(price, assigned, iters, per_task_cost, per_task_true,
+        per_task_stay)``. The Eq. 7 preemption discount is applied *here*,
+        on top of the undiscounted `policy.cost_round_step` output, so the
+        true (performance-only) cost of every placement is available to the
         what-if axis without a second cost build — through the same
         `policy.apply_preemption_discount` the per-round path inlines.
+        ``per_task_stay`` is the undiscounted cost of every task staying
+        put (running tasks on their current machine, pending tasks
+        unscheduled), evaluated over ``stay_active`` rows (defaults to the
+        round's active rows) — what-if lanes pass the *unmasked* active set
+        so frozen movers still report a stay cost.
         """
         (task_job, perf_idx, root_lat, wait_s, run_s, cur_machine, active) = inputs
         M = self.n_machines
@@ -344,7 +385,13 @@ class RoundProgram:
         )
         per_task_cost = auction.assignment_cost_step(wj, a, assigned, active)
         per_task_true = auction.assignment_cost_step(w_base, a, assigned, active)
-        return price, assigned, iters, per_task_cost, per_task_true
+        stay_cols = jnp.where(cur_machine >= 0, cur_machine, M + task_job).astype(
+            jnp.int32
+        )
+        per_task_stay = auction.assignment_cost_step(
+            w_base, a, stay_cols, active if stay_active is None else stay_active
+        )
+        return price, assigned, iters, per_task_cost, per_task_true, per_task_stay
 
     def _consumed(self, assigned, active):
         """(M,) slots debited by one round's placements (duplicate-safe)."""
@@ -367,7 +414,7 @@ class RoundProgram:
             free_slots = (
                 carry.free_slots + slots_in if self.chain_slots else slots_in
             )
-            price, assigned, iters, cost, true_cost = self._round_body(
+            price, assigned, iters, cost, true_cost, _stay = self._round_body(
                 free_slots,
                 (task_job, perf_idx, root_lat, wait_s, run_s, cur_machine,
                  active),
@@ -383,14 +430,40 @@ class RoundProgram:
 
         return jax.lax.scan(body, state, window_arrays)
 
-    def _whatif_impl(self, free_slots, round_arrays, variant_params, scale):
-        def one(vp):
-            _price, assigned, iters, cost, true_cost = self._round_body(
-                free_slots, round_arrays, scale=scale, **vp
-            )
-            return assigned, iters, cost, true_cost
+    def _whatif_impl(
+        self, free_slots, round_arrays, variant_params, variant_active, scale
+    ):
+        (task_job, perf_idx, root_lat, wait_s, run_s, cur_machine, active) = (
+            round_arrays
+        )
+        M = self.n_machines
 
-        return jax.vmap(one)(variant_params)
+        def one(vp, mask):
+            # Frozen movers (active rows masked out of this lane) keep
+            # running where they are: re-debit their current machine's
+            # slot (the host reclaimed it when nominating them as movers)
+            # and solve the round for the remaining rows only.
+            lane_active = jnp.logical_and(active, mask)
+            frozen = jnp.logical_and(active, jnp.logical_not(mask))
+            keeps = jnp.logical_and(
+                frozen, jnp.logical_and(cur_machine >= 0, cur_machine < M)
+            )
+            free_lane = free_slots - (
+                jnp.zeros((M,), jnp.int32)
+                .at[jnp.clip(cur_machine, 0, M - 1)]
+                .add(keeps.astype(jnp.int32))
+            )
+            _price, assigned, iters, cost, true_cost, stay = self._round_body(
+                free_lane,
+                (task_job, perf_idx, root_lat, wait_s, run_s, cur_machine,
+                 lane_active),
+                scale=scale,
+                stay_active=active,
+                **vp,
+            )
+            return assigned, iters, cost, true_cost, stay
+
+        return jax.vmap(one)(variant_params, variant_active)
 
     # ------------------------------------------------------------------ #
 
@@ -474,6 +547,7 @@ class RoundProgram:
         self,
         state: RoundState,
         variants: Sequence[PolicyParams],
+        active_masks: Optional[np.ndarray] = None,
     ) -> WhatIfResult:
         """Evaluate K candidate parameterisations of one round in ONE
         dispatch (vmapped what-if axis).
@@ -484,6 +558,13 @@ class RoundProgram:
         are independent). Rank variants with `WhatIfResult.true_costs` —
         total cost with no preemption discount and no tie jitter, i.e. pure
         expected application performance of the resulting placement.
+
+        ``active_masks`` (K, T) bool — optional per-lane mover masks: rows
+        masked False are frozen on their current machine for that lane
+        (slot re-debited on device, stay cost reported). An all-True lane
+        is bit-identical to the unmasked path. Rank masked lanes with
+        `WhatIfResult.lane_outcomes`, which charges frozen rows their stay
+        cost so totals are comparable across different masks.
         """
         if not variants:
             raise ValueError("what_if needs at least one PolicyParams variant")
@@ -494,12 +575,27 @@ class RoundProgram:
             exact=self.exact,
         )
         self._check_cost_bound(window, variants)
+        K = len(variants)
+        T = window.n_tasks[0]
+        masks = np.ones((K, self.n_pad_tasks), bool)
+        if active_masks is not None:
+            active_masks = np.asarray(active_masks, bool)
+            if active_masks.shape[0] != K or active_masks.shape[1] > self.n_pad_tasks:
+                raise ValueError(
+                    f"active_masks shape {active_masks.shape} does not match "
+                    f"{K} variants / bucket {self.n_pad_tasks}"
+                )
+            masks[:, : active_masks.shape[1]] = active_masks
         scale = int(window.scale[0])
         arrs = self._window_arrays(window)
         round_arrays = tuple(a[0] for a in arrs[:7])
         free_slots = arrs[7][0]
-        assigned, iters, cost, true_cost = self._whatif_jit(
-            free_slots, round_arrays, _pad_params(variants), jnp.int32(scale)
+        assigned, iters, cost, true_cost, stay_cost = self._whatif_jit(
+            free_slots,
+            round_arrays,
+            _pad_params(variants),
+            jnp.asarray(masks),
+            jnp.int32(scale),
         )
         iters_np = np.asarray(iters)
         if int(iters_np.max(initial=0)) >= self.max_iters:
@@ -507,8 +603,7 @@ class RoundProgram:
                 f"auction hit the iteration cap ({self.max_iters}) in a what-if lane"
             )
         assigned_np = np.asarray(assigned)
-        T = window.n_tasks[0]
-        if (assigned_np[:, :T] < 0).any():
+        if ((assigned_np[:, :T] < 0) & masks[:, :T]).any():
             raise RuntimeError(
                 "auction did not converge in a what-if lane: unassigned tasks remain"
             )
@@ -517,5 +612,7 @@ class RoundProgram:
             iterations=iters_np,
             per_task_cost=np.asarray(cost),
             per_task_true_cost=np.asarray(true_cost),
+            per_task_stay_cost=np.asarray(stay_cost),
             n_tasks=T,
+            active_masks=masks if active_masks is not None else None,
         )

@@ -25,7 +25,14 @@ from typing import Dict, Mapping, Optional, Tuple
 
 import numpy as np
 
-from .latency import LatencyPlane
+from .latency import (
+    DriftingHotspot,
+    LatencyEvents,
+    LatencyPlane,
+    RegimeSchedule,
+    SpikeStormSpec,
+    overlay_spike_storms,
+)
 from .policy import PolicyParams
 from .topology import TIER_INTER_POD, TIER_POD, Topology
 
@@ -60,6 +67,20 @@ class Scenario:
     hotspot_window: Tuple[float, float] = (0.0, 1.0)
     # Straggler mitigation threshold (requires preemption to act).
     straggler_threshold: Optional[float] = None
+    # -------- dynamic latency events (time-varying plane, §7) -------- #
+    # Drifting rack hotspots: each mapping is DriftingHotspot kwargs in
+    # duration fractions — `window` (start, end fractions), `rack0_frac`
+    # (starting rack as a fraction of the rack count), and
+    # `drift_racks_per_run` (fraction of the rack ring traversed over the
+    # full replay), plus the literal `width_racks` / `multiplier` fields.
+    dynamic_hotspots: Tuple[Mapping, ...] = ()
+    # Regime shifts: at each duration fraction, `regime_frac` of pairs
+    # re-roll their trace assignment (Fig. 2 VM-restart regimes).
+    regime_shift_at: Tuple[float, ...] = ()
+    regime_frac: float = 0.5
+    # Long-tail spike storms baked into the tier series (SpikeStormSpec
+    # kwargs; seeded from the plane seed x scenario name).
+    spike_storms: Optional[Mapping] = None
 
     # ------------------------------------------------------------------ #
 
@@ -81,19 +102,64 @@ class Scenario:
             events.extend((t, int(m)) for m in victims)
         return tuple(events)
 
+    @property
+    def is_dynamic(self) -> bool:
+        """True when the scenario layers time-varying latency events."""
+        return bool(
+            self.dynamic_hotspots or self.regime_shift_at or self.spike_storms
+        )
+
     def plane(self, base: LatencyPlane, duration_s: int) -> LatencyPlane:
         """The scenario's latency plane: `base` itself when unperturbed
         (planes are shared across sweep cells), else a copy with the
-        hotspot traces scaled inside the window."""
-        if not self.hotspot_tiers or self.hotspot_scale == 1.0:
+        static hotspot traces scaled and/or dynamic events attached."""
+        static = bool(self.hotspot_tiers) and self.hotspot_scale != 1.0
+        if not static and not self.is_dynamic:
             return base
-        series = base.series.copy()
-        lo = int(self.hotspot_window[0] * duration_s)
-        hi = int(self.hotspot_window[1] * duration_s)
-        n = min(self.hotspot_traces, series.shape[1])
-        for tier in self.hotspot_tiers:
-            series[tier, :n, lo:hi] *= self.hotspot_scale
-        return LatencyPlane(topo=base.topo, series=series, seed=base.seed)
+        series = base.series
+        if static:
+            series = series.copy()
+            lo = int(self.hotspot_window[0] * duration_s)
+            hi = int(self.hotspot_window[1] * duration_s)
+            n = min(self.hotspot_traces, series.shape[1])
+            for tier in self.hotspot_tiers:
+                series[tier, :n, lo:hi] *= self.hotspot_scale
+        if self.spike_storms is not None:
+            spec = SpikeStormSpec(
+                seed=base.seed ^ zlib.crc32(self.name.encode()),
+                **self.spike_storms,
+            )
+            series = overlay_spike_storms(series, spec)
+        n_racks = base.topo.n_racks
+        hotspots = []
+        for kw in self.dynamic_hotspots:
+            kw = dict(kw)
+            w_lo, w_hi = kw.pop("window")
+            rack0 = int(kw.pop("rack0_frac", 0.0) * n_racks)
+            drift = kw.pop("drift_racks_per_run", 0.0) * n_racks
+            start_s, end_s = w_lo * duration_s, w_hi * duration_s
+            hotspots.append(
+                DriftingHotspot(
+                    start_s=start_s,
+                    end_s=end_s,
+                    rack0=rack0,
+                    drift_racks_per_s=drift / max(duration_s, 1),
+                    **kw,
+                )
+            )
+        regime = None
+        if self.regime_shift_at:
+            regime = RegimeSchedule(
+                times=tuple(f * duration_s for f in self.regime_shift_at),
+                frac=self.regime_frac,
+            )
+        return LatencyPlane(
+            topo=base.topo,
+            series=series,
+            seed=base.seed,
+            events=LatencyEvents(hotspots=tuple(hotspots), regime=regime),
+            allow_wrap=base.allow_wrap,
+        )
 
     def sim_config_kwargs(self, topo: Topology, duration_s: int, seed: int) -> Dict:
         """SimConfig kwargs (minus policy/seed) for this scenario."""
@@ -142,6 +208,49 @@ SCENARIOS: Dict[str, Scenario] = {
             hotspot_tiers=(TIER_POD, TIER_INTER_POD),
             hotspot_scale=4.0,
             hotspot_window=(0.3, 0.8),
+        ),
+        Scenario(
+            name="drifting_hotspot",
+            description=(
+                "rack-pinned congestion hotspot drifting across the full "
+                "rack ring mid-run (PTPmesh-style moving congestion)"
+            ),
+            dynamic_hotspots=(
+                {
+                    "window": (0.1, 0.9),
+                    "rack0_frac": 0.0,
+                    "drift_racks_per_run": 1.0,  # full ring traversal
+                    "width_racks": 2,
+                    "multiplier": 4.0,
+                },
+            ),
+            params_kwargs={"preemption": True, "beta_scale": 0.0},
+            config_kwargs={"migration_interval_s": 15},
+        ),
+        Scenario(
+            name="regime_shifts",
+            description=(
+                "half of all pairs re-roll their latency trace at t=1/3 "
+                "and t=2/3 (Fig. 2 VM-restart regimes)"
+            ),
+            regime_shift_at=(1.0 / 3.0, 2.0 / 3.0),
+            regime_frac=0.5,
+            params_kwargs={"preemption": True, "beta_scale": 0.0},
+            config_kwargs={"migration_interval_s": 15},
+        ),
+        Scenario(
+            name="spike_storms",
+            description=(
+                "long-tail expovariate spike storms on half the pod/"
+                "inter-pod traces (heavy-tailed congestion events)"
+            ),
+            spike_storms={
+                "storms_per_hour": 30.0,
+                "mean_duration_s": 60.0,
+                "amp_scale": 2.0,
+            },
+            params_kwargs={"preemption": True, "beta_scale": 0.0},
+            config_kwargs={"migration_interval_s": 15},
         ),
         Scenario(
             name="google_trace",

@@ -442,6 +442,20 @@ class WindowedAuctionBackend(AuctionBackend):
             ),
         )
 
+    def whatif_result(
+        self, state: RoundState, ctx: RoundContext, variants, active_masks=None
+    ):
+        """Raw what-if axis for the migration controller: one dispatch over
+        K (PolicyParams, mover-mask) lanes, returning the full
+        `WhatIfResult` (placements, true costs, stay costs) plus the
+        dispatch time — the controller ranks lanes and applies budgets on
+        host, which `place_whatif`'s argmin-and-return hides."""
+        _key, prog = self._program(state.n_tasks, state.n_jobs)
+        t0 = time.perf_counter()
+        res = prog.what_if(state, list(variants), active_masks=active_masks)
+        algo_s = time.perf_counter() - t0
+        return res, algo_s
+
 
 class MCMFBackend(SchedulerBackend):
     """Paper-faithful Quincy flow network + SSP MCMF (the oracle solver)."""

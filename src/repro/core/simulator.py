@@ -136,6 +136,27 @@ class SimConfig:
     # applied. Empty = regular single-solve rounds (the parity default).
     # Requires a backend with `place_whatif` (``auction_windowed``).
     whatif_betas: tuple = ()
+    # ---- time-varying plane + continuous migration controller (§7) ---- #
+    # Device-resident latency oracle: each round's root-latency rows are
+    # computed on device from incremental per-second plane updates (the
+    # 24-float series column + rack hotspot multipliers; see
+    # latency_device.DeviceLatencyOracle) and handed to the round program
+    # as device arrays — no host (J, M) rebuild or re-upload per round.
+    # Requires the windowed backend. Bit-identical to the host path.
+    device_latency: bool = False
+    # Close the §7 loop: detect QoS-degraded jobs from the perf-sampling
+    # path (consecutive-sample trigger window with hysteresis + a
+    # post-migration hold-down, never a single-sample trigger), evaluate
+    # candidate re-placements — beta scales x mover subsets — through the
+    # backend's vmapped what-if axis in one dispatch each migration round,
+    # and migrate under `migration_budget` ranked by true-cost
+    # improvement. Requires preemption and the auction_windowed backend.
+    migration_controller: bool = False
+    qos_threshold: float = 0.9  # degraded below this predicted perf
+    qos_window: int = 2  # consecutive below-threshold samples to trigger
+    qos_clear_margin: float = 0.02  # hysteresis band above the threshold
+    qos_hold_s: float = 45.0  # post-migration re-trigger hold-down
+    migration_budget: int = 256  # max migrations per controller round
 
 
 class Simulator:
@@ -189,10 +210,31 @@ class Simulator:
                 f"whatif_betas requires a backend with a what-if axis "
                 f"(auction_windowed), got {self.backend.name!r}"
             )
+        if config.migration_controller:
+            if not hasattr(self.backend, "whatif_result"):
+                raise ValueError(
+                    f"migration_controller requires a backend with a what-if "
+                    f"axis (auction_windowed), got {self.backend.name!r}"
+                )
+            if not config.params.preemption:
+                raise ValueError(
+                    "migration_controller requires params.preemption=True "
+                    "(it migrates running tasks)"
+                )
+        self.oracle = None
+        if config.device_latency:
+            if not hasattr(self.backend, "place_whatif"):
+                raise ValueError(
+                    f"device_latency requires the windowed backend "
+                    f"(auction_windowed), got {self.backend.name!r}"
+                )
+            from .latency_device import DeviceLatencyOracle
+
+            self.oracle = DeviceLatencyOracle(plane)
         self.dead: set = set()  # failed machines
         self.dead_mask = np.zeros(M, bool)
         self._failures = sorted(config.failures)
-        from repro.distributed.straggler import StragglerDetector
+        from repro.distributed.straggler import QoSTracker, StragglerDetector
 
         self.straggler = (
             StragglerDetector(threshold=config.straggler_threshold)
@@ -200,6 +242,16 @@ class Simulator:
             else None
         )
         self._straggler_jobs: set = set()
+        self.qos = (
+            QoSTracker(
+                threshold=config.qos_threshold,
+                window=config.qos_window,
+                clear_margin=config.qos_clear_margin,
+                hold_s=config.qos_hold_s,
+            )
+            if config.migration_controller
+            else None
+        )
 
     # ------------------------------------------------------------------ #
 
@@ -374,9 +426,13 @@ class Simulator:
                 # instead of O(all jobs ever) on multi-week replays.
                 # (_straggler_jobs itself is cleared every straggler round
                 # and must keep done jobs until then — seed semantics.)
-                if self.straggler is not None:
+                if self.straggler is not None or self.qos is not None:
                     for j in np.nonzero(newly)[0]:
-                        self.straggler.forget(int(self.jt.job_id[j]))
+                        jid = int(self.jt.job_id[j])
+                        if self.straggler is not None:
+                            self.straggler.forget(jid)
+                        if self.qos is not None:
+                            self.qos.forget(jid)
 
     def _start_batch(
         self, ids: np.ndarray, machines: np.ndarray, t: float, algo_s: float
@@ -461,9 +517,13 @@ class Simulator:
         task_job = np.searchsorted(job_ids_sorted, jid_actual).astype(np.int64)
         root_machine = self.jt.root_machine[job_dense_sorted].astype(np.int64)
         if with_latency:
-            root_latency = np.stack(
-                [self.plane.latency_from(int(m), int(t)) for m in root_machine]
-            )
+            # Canonical batched rows; with the device oracle they are jax
+            # arrays computed from incremental plane updates and never
+            # come back to host (bit-identical either way).
+            if self.oracle is not None:
+                root_latency = self.oracle.root_rows(root_machine, int(t))
+            else:
+                root_latency = self.plane.latency_rows(root_machine, int(t))
         else:
             # Cost-model-free backends never read the latency plane; a
             # zero-width stand-in makes accidental use fail loudly.
@@ -485,8 +545,14 @@ class Simulator:
             free_slots=free,
         )
 
-    def _select_movers(self) -> np.ndarray:
-        """Running tasks eligible to migrate this round (seed order)."""
+    def _select_movers(self, restrict_jobs=None) -> np.ndarray:
+        """Running tasks eligible to migrate this round (seed order).
+
+        ``restrict_jobs`` (iterable of workload job ids) limits movers to
+        those jobs — the migration controller passes its QoS-degraded set
+        so only degraded jobs' tasks are candidates (takes precedence over
+        the straggler filter).
+        """
         cfg = self.cfg
         if not len(self.running):
             return EMPTY_IDS
@@ -497,7 +563,11 @@ class Simulator:
         # would silently index latency_from(-1) as machine M-1. Hold such
         # tasks until their root is re-placed.
         keep &= self.jt.root_machine[self.tt.job[self.running]] >= 0
-        if self._straggler_jobs:
+        if restrict_jobs is not None:
+            jid = self.jt.job_id[self.tt.job[self.running]]
+            wanted = np.fromiter(restrict_jobs, np.int64, len(restrict_jobs))
+            keep &= np.isin(jid, wanted)
+        elif self._straggler_jobs:
             jid = self.jt.job_id[self.tt.job[self.running]]
             keep &= np.isin(
                 jid, np.fromiter(self._straggler_jobs, np.int64, len(self._straggler_jobs))
@@ -527,10 +597,29 @@ class Simulator:
         # random_solver their presence even shifts the rng stream) and
         # clears the straggler set, but only migration-capable backends
         # later apply the mover columns; the two §6.1 heuristics do neither.
+        degraded: Dict[int, float] = {}
         if migration_round and backend.selects_movers:
-            mover_ids = self._select_movers()
+            if self.qos is not None:
+                # Continuous controller: only QoS-degraded jobs' tasks are
+                # migration candidates (the trigger window already debounced
+                # them; healthy jobs are never churned).
+                degraded = self.qos.degraded_jobs()
+                mover_ids = (
+                    self._select_movers(restrict_jobs=degraded)
+                    if degraded
+                    else EMPTY_IDS
+                )
+            else:
+                mover_ids = self._select_movers()
             self._straggler_jobs.clear()
         if not len(ready_ids) and not len(mover_ids):
+            # A migration round with zero eligible movers still samples the
+            # migrated-percentage series (0%): dropping it silently would
+            # desynchronise the series from the migration cadence.
+            if migration_round and backend.supports_migration:
+                self.metrics.migrated_pct_per_round.append(0.0)
+                if self.qos is not None:
+                    self._record_controller(0.0, len(degraded))
             return
 
         state = self._build_round_state(
@@ -540,11 +629,25 @@ class Simulator:
         ctx = RoundContext(
             rng=self.rng, task_counts=self.task_counts, n_ready=len(ready_ids)
         )
+        # Continuous migration controller: stack (beta x mover-subset)
+        # re-placement hypotheses plus an all-frozen baseline through the
+        # what-if axis in one dispatch, pick the lowest true-cost outcome,
+        # and cap the round's migrations at the preemption budget.
+        ctrl_info = None
+        if (
+            migration_round
+            and self.qos is not None
+            and len(mover_ids)
+            and hasattr(backend, "whatif_result")
+        ):
+            placement, ctrl_info = self._controller_place(
+                state, ctx, mover_ids, degraded, n_ready=len(ready_ids)
+            )
         # What-if migration rounds: evaluate K preemption-aggressiveness
         # (beta) variants in one vmapped dispatch and apply the placement
         # with the best true (undiscounted) cost. Off by default; the
         # single-solve path below stays the bit-parity reference.
-        if (
+        elif (
             migration_round
             and cfg.whatif_betas
             and len(mover_ids)
@@ -575,6 +678,7 @@ class Simulator:
             # and no migration metrics accrue (seed semantics).
             return
         n_migrated = 0
+        mig = None
         if len(mover_ids):
             mcols = cols[n_ready:]
             cur = self.tt.machine[mover_ids]
@@ -590,10 +694,133 @@ class Simulator:
                 np.subtract.at(self.free_slots, mcols[mig], 1)
                 np.add.at(self.task_counts, mcols[mig], 1)
                 self.metrics.tasks_migrated += n_migrated
-        if migration_round and len(mover_ids):
+        if migration_round:
+            # Every migration round records a sample — 0.0 when no movers
+            # were eligible — so the series length tracks the cadence.
             self.metrics.migrated_pct_per_round.append(
-                100.0 * n_migrated / len(mover_ids)
+                100.0 * n_migrated / len(mover_ids) if len(mover_ids) else 0.0
             )
+        if ctrl_info is not None:
+            self._record_controller(
+                ctrl_info["improvement"], ctrl_info["n_degraded"]
+            )
+            if mig is not None and n_migrated:
+                # Hold down re-triggering while the moved jobs' perf
+                # settles at the new placement.
+                moved = np.unique(self.jt.job_id[self.tt.job[mover_ids[mig]]])
+                for j in moved:
+                    self.qos.migrated(int(j), float(t))
+
+    def _record_controller(self, improvement: float, n_degraded: int) -> None:
+        self.metrics.controller_improvement_per_round.append(float(improvement))
+        self.metrics.degraded_jobs_per_round.append(float(n_degraded))
+        self.metrics.controller_rounds += 1
+
+    def _controller_place(self, state, ctx, mover_ids, degraded, n_ready):
+        """One controller round: rank re-placement hypotheses, apply the
+        budgeted best.
+
+        Lane 0 freezes every mover (the no-migration baseline). The other
+        lanes are the cross product of candidate beta scales
+        (``whatif_betas``, defaulting to {0, configured beta}) and mover
+        subsets (all degraded jobs' movers; the worst half by QoS sample
+        when that is a strict subset). All lanes solve in ONE vmapped
+        dispatch; outcomes charge frozen rows their stay cost so totals
+        are comparable. If no lane beats the baseline the round migrates
+        nothing — the controller never churns on noise. When the chosen
+        lane proposes more moves than ``migration_budget``, the
+        lowest-improvement moves are reverted (slot-safely) to fit.
+        """
+        cfg = self.cfg
+        T = state.n_tasks
+        M = state.n_machines
+        betas = list(
+            dict.fromkeys(cfg.whatif_betas or (0.0, cfg.params.beta_scale))
+        )
+        # Mover-subset masks over the round's task rows (ready rows always
+        # solve; only mover rows [n_ready:] are ever frozen).
+        all_movers = np.ones(T, bool)
+        frozen_all = all_movers.copy()
+        frozen_all[n_ready:] = False
+        subsets = [all_movers]
+        if len(degraded) > 1:
+            # Worst half of degraded jobs by last sample (lower = worse):
+            # a cheaper hypothesis when only part of the degradation is
+            # actionable.
+            worst = sorted(degraded, key=degraded.get)
+            worst = worst[: (len(worst) + 1) // 2]
+            mover_jobs = self.jt.job_id[self.tt.job[mover_ids]]
+            sub = all_movers.copy()
+            sub[n_ready:] = np.isin(mover_jobs, np.asarray(worst, np.int64))
+            if sub[n_ready:].any() and not sub[n_ready:].all():
+                subsets.append(sub)
+        variants = [cfg.params]  # lane 0: all movers frozen (params unused)
+        masks = [frozen_all]
+        for b in betas:
+            vp = dataclasses.replace(cfg.params, beta_scale=b)
+            for sub in subsets:
+                variants.append(vp)
+                masks.append(sub)
+        res, algo_s = self.backend.whatif_result(
+            state, ctx, variants, active_masks=np.stack(masks)
+        )
+        outcomes = res.lane_outcomes()
+        best = int(np.argmin(outcomes))
+        improvement = float(outcomes[0] - outcomes[best])
+        if improvement <= 0.0:
+            best, improvement = 0, 0.0
+        cols = res.assigned[best, :T].astype(np.int64)
+        # Frozen rows keep running where they are (col -1 == "no decision",
+        # which the mover-apply step treats as stay).
+        cols = np.where(masks[best], cols, -1)
+
+        mcols = cols[n_ready:]  # view into cols — reverts write through
+        cur = state.cur_machine[n_ready:]
+        moves = (mcols >= 0) & (mcols < M) & (mcols != cur)
+        n_moves = int(moves.sum())
+        if n_moves:
+            # Post-application slot balance: placed columns debit, movers
+            # staying put (unplaced columns) re-occupy their current slot.
+            placedc = cols[(cols >= 0) & (cols < M)]
+            free_after = state.free_slots.astype(np.int64) - np.bincount(
+                placedc, minlength=M
+            )
+            mkeep = ~((mcols >= 0) & (mcols < M))
+            if mkeep.any():
+                np.subtract.at(free_after, cur[mkeep], 1)
+            # Per-move true-cost improvement (stay minus move). The lane
+            # solve minimizes *jittered* cost, so it happily proposes
+            # zero-gain shuffles that churn tasks for nothing — and under
+            # a drifting plane a stale zero-gain move is a loss by the
+            # next sample. Revert non-improving moves first, then keep
+            # reverting lowest-improvement moves down to the budget.
+            imp = res.per_task_stay_cost[best, :T].astype(
+                np.int64
+            ) - res.per_task_true_cost[best, :T].astype(np.int64)
+            cand = np.nonzero(moves)[0]  # mover-row offsets
+            order = np.argsort(imp[n_ready + cand], kind="stable")
+            for off in cand[order]:
+                gain = int(imp[n_ready + off])
+                if gain > 0 and n_moves <= cfg.migration_budget:
+                    break  # ascending order: the rest improve and fit
+                c = int(cur[off])
+                # Revert only when the task's old slot is still free after
+                # everything else applies — never oversubscribe a machine
+                # whose reclaimed slot the solver already handed out.
+                if free_after[c] >= 1:
+                    free_after[c] -= 1
+                    free_after[mcols[off]] += 1
+                    cols[n_ready + off] = -1
+                    n_moves -= 1
+        from .scheduler_backend import Placement
+
+        placement = Placement(
+            cols=cols, algo_s=algo_s, objective=int(outcomes[best])
+        )
+        return placement, {
+            "improvement": improvement,
+            "n_degraded": len(degraded),
+        }
 
     # ------------------------------------------------------------------ #
 
@@ -636,6 +863,7 @@ class Simulator:
         if (
             contiguous
             and self.straggler is None
+            and self.qos is None
             and hasattr(self.metrics, "record_perf_bulk")
         ):
             # Streaming metrics: stay vectorized end to end — a Python loop
@@ -663,6 +891,8 @@ class Simulator:
             if self.straggler is not None and self.straggler.observe(j, sample):
                 self._straggler_jobs.add(j)
                 self.straggler.clear(j)
+            if self.qos is not None:
+                self.qos.observe(j, sample, float(t))
 
 
 def simulate(

@@ -54,3 +54,63 @@ class StragglerDetector:
         rule out (the simulator calls this as jobs complete)."""
         self._ewma.pop(job_id, None)
         self._below.pop(job_id, None)
+
+
+@dataclasses.dataclass
+class QoSTracker:
+    """QoS trigger window with hysteresis for the migration controller.
+
+    Distinct from `StragglerDetector` (EWMA + patience, flags jobs for a
+    dedicated straggler round): this is the *continuous* controller's
+    degradation signal. A job becomes degraded after ``window`` consecutive
+    raw samples below ``threshold`` — a single bad sample never triggers a
+    migration — and clears only once a sample reaches ``threshold +
+    clear_margin``: inside the hysteresis band the job keeps its current
+    state, so a job oscillating around the threshold doesn't flap between
+    migrate/don't-migrate every sample. After the controller migrates a
+    job, a ``hold_s`` hold-down suppresses re-triggering while the moved
+    tasks' performance settles at the new placement.
+    """
+
+    threshold: float = 0.9
+    window: int = 2
+    clear_margin: float = 0.02
+    hold_s: float = 0.0
+    _below: Dict[int, int] = dataclasses.field(default_factory=dict)
+    _degraded: Dict[int, float] = dataclasses.field(default_factory=dict)
+    _hold_until: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def observe(self, job_id: int, perf: float, t: float) -> bool:
+        """Record a raw perf sample; True if the job is degraded."""
+        hold = self._hold_until.get(job_id)
+        if hold is not None:
+            if t < hold:
+                return False
+            del self._hold_until[job_id]
+        if perf < self.threshold:
+            n = self._below.get(job_id, 0) + 1
+            self._below[job_id] = n
+            if n >= self.window:
+                self._degraded[job_id] = perf
+        elif perf >= self.threshold + self.clear_margin:
+            self._below.pop(job_id, None)
+            self._degraded.pop(job_id, None)
+        # else: hysteresis band — keep the current state either way.
+        return job_id in self._degraded
+
+    def degraded_jobs(self) -> Dict[int, float]:
+        """{job_id: last below-threshold sample} for degraded jobs (the
+        sample doubles as a severity key — lower is worse)."""
+        return dict(self._degraded)
+
+    def migrated(self, job_id: int, t: float) -> None:
+        """The controller moved this job: reset and hold down."""
+        self._below.pop(job_id, None)
+        self._degraded.pop(job_id, None)
+        if self.hold_s > 0:
+            self._hold_until[job_id] = t + self.hold_s
+
+    def forget(self, job_id: int) -> None:
+        self._below.pop(job_id, None)
+        self._degraded.pop(job_id, None)
+        self._hold_until.pop(job_id, None)

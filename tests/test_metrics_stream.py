@@ -251,6 +251,8 @@ def test_simulator_streaming_vs_exact_tolerance():
         "placement_latency_s": m_exact.placement_latency_s,
         "response_time_s": m_exact.response_time_s,
         "migrated_pct": m_exact.migrated_pct_per_round,
+        "controller_improvement": m_exact.controller_improvement_per_round,
+        "degraded_jobs": m_exact.degraded_jobs_per_round,
     }
     quantile_keys = {
         f"{name}_p{q}": (name, q) for name in exact_series for q in (50, 90, 99)
@@ -300,6 +302,8 @@ def test_streaming_replay_keeps_bounded_accumulators():
         "placement_latency_s",
         "response_time_s",
         "migrated_pct_per_round",
+        "controller_improvement_per_round",
+        "degraded_jobs_per_round",
     ):
         series = getattr(m, name)
         assert isinstance(series, StreamSeries), name

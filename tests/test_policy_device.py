@@ -420,3 +420,141 @@ def test_make_backend_names_and_config_resolution():
         assert be.name == name
     with pytest.raises(KeyError):
         make_backend("nope", params, TOPO_FULL, LUT)
+
+
+# --------------------------------------------------------------------- #
+# Device-resident latency oracle: bit parity + incremental uploads
+
+
+def test_device_latency_oracle_bit_identical_on_dynamic_plane():
+    from repro.core.latency_device import DeviceLatencyOracle
+
+    topo = TOPO_FULL
+    ev = latency.LatencyEvents(
+        hotspots=(
+            latency.DriftingHotspot(
+                start_s=10.0, end_s=80.0, rack0=3,
+                drift_racks_per_s=0.2, width_racks=2, multiplier=5.0,
+            ),
+        ),
+        regime=latency.RegimeSchedule(times=(30.0, 60.0), frac=0.5),
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=90, seed=2, events=ev)
+    oracle = DeviceLatencyOracle(plane)
+    roots = [0, 17, 33, 63, 17]
+    # Hotspot drift positions and both regime boundaries.
+    for t in (0, 6, 29, 30, 31, 59, 60, 89):
+        got = np.asarray(oracle.root_rows(roots, t))
+        want = plane.latency_rows(roots, t)
+        assert got.dtype == np.float32
+        assert np.array_equal(got, want), t
+    # The recurring upload is the 24-float column + rack mults + root ids,
+    # never the (J, M) block.
+    st = oracle.stats()
+    assert st["round_uploads"] == 8
+    assert st["floats_per_round"] < topo.n_machines  # << J * M
+    # Decompositions are built once per (root, epoch), then cached.
+    builds = st["decomp_builds"]
+    np.asarray(oracle.root_rows(roots, 89))
+    assert oracle.stats()["decomp_builds"] == builds
+
+
+def test_device_latency_simulator_metrics_identical():
+    """device_latency=True swaps the host (J, M) row build for the oracle;
+    every placement and metric must stay bit-identical."""
+    from repro.core.workload import synth_workload
+
+    topo = topology.Topology(
+        n_machines=32, machines_per_rack=8, racks_per_pod=2, slots_per_machine=4
+    )
+    ev = latency.LatencyEvents(
+        hotspots=(
+            latency.DriftingHotspot(
+                start_s=20.0, end_s=80.0, rack0=0,
+                drift_racks_per_s=0.05, width_racks=1, multiplier=4.0,
+            ),
+        )
+    )
+    plane = latency.LatencyPlane.synthesize(topo, duration_s=90, seed=1, events=ev)
+    wl = synth_workload(topo, duration_s=90, seed=1, target_utilisation=0.5)
+
+    def run(dev):
+        cfg = SimConfig(
+            policy="nomora", backend="auction_windowed", seed=5,
+            fixed_algo_s=0.0, device_latency=dev,
+            params=policy.PolicyParams(preemption=True, beta_scale=0.0),
+            migration_interval_s=30,
+        )
+        return Simulator(wl, plane, cfg).run()
+
+    host, dev = run(False), run(True)
+    assert host.per_job_perf == dev.per_job_perf
+    assert host.tasks_placed == dev.tasks_placed
+    assert host.tasks_migrated == dev.tasks_migrated
+    sh, sd = host.summary(), dev.summary()
+    assert sh.keys() == sd.keys()
+    for k in sh:
+        # NaN marks an empty series (repo convention); NaN != NaN, so
+        # compare with equal_nan semantics.
+        assert sh[k] == sd[k] or (np.isnan(sh[k]) and np.isnan(sd[k])), k
+
+
+# --------------------------------------------------------------------- #
+# Mover-mask what-if lanes (migration controller's solve axis)
+
+
+def test_whatif_mask_lanes_pin_frozen_rows_and_outcomes():
+    from repro.core.round_program import RoundProgram
+
+    rng = np.random.default_rng(23)
+    topo = TOPO_PARTIAL
+    state = _state(rng, topo, T=14, J=3, preempt_running=True)
+    params = policy.PolicyParams(preemption=True, beta_scale=0.0)
+    Tp, Jp = 32, 8
+    prog = RoundProgram(
+        topo, params, LUT, n_pad_tasks=Tp, n_pad_jobs=Jp,
+        slots_per_machine=topo.slots_per_machine, tie_jitter=9, exact=False,
+        **_COSTMAP_KW,
+    )
+    T = state.n_tasks
+    M = topo.n_machines
+    # Ample capacity so frozen re-occupancy never clips a lane to zero.
+    state.free_slots = np.full(M, 3, np.int32)
+    running = state.cur_machine >= 0
+    all_true = np.ones(T, bool)
+    frozen_all = ~running  # freeze every running task
+    half = all_true.copy()
+    half[np.nonzero(running)[0][::2]] = False  # freeze every other runner
+    masks = np.stack([all_true, frozen_all, half])
+    res = prog.what_if(state, [params] * 3, active_masks=masks)
+
+    # Lane with an all-True mask is bit-identical to the unmasked axis.
+    ref = prog.what_if(state, [params])
+    assert np.array_equal(res.variant_cols(0), ref.variant_cols(0))
+
+    # Outcomes: frozen rows charge their stay cost, so lane totals are
+    # comparable; the all-frozen lane's outcome is exactly the sum of
+    # running rows' stay costs plus pending rows' placed/unscheduled cost
+    # — its mover contribution is the no-migration baseline by construction.
+    out = res.lane_outcomes()
+    assert out.shape == (3,)
+    true1 = res.per_task_true_cost[1, :T].astype(np.int64)
+    stay1 = res.per_task_stay_cost[1, :T].astype(np.int64)
+    assert out[1] == np.where(masks[1], true1, stay1).sum()
+    assert (stay1[running] == np.where(masks[1], true1, stay1)[running]).all()
+
+    # Capacity accounting: each lane solves against free_lane =
+    # free_slots - (frozen runners re-occupying their slots), so active
+    # placements never exceed it on any machine.
+    for k in range(3):
+        cols = res.variant_cols(k)
+        lane_placed = masks[k] & (cols >= 0) & (cols < M)
+        counts = np.bincount(cols[lane_placed], minlength=M)
+        frozen_occ = np.bincount(
+            state.cur_machine[running & ~masks[k]], minlength=M
+        )
+        assert (counts + frozen_occ <= state.free_slots).all(), k
+
+    # Freezing movers changes the solve: the half-frozen lane must not
+    # silently equal the all-active lane on the frozen rows' columns.
+    assert not np.array_equal(res.variant_cols(2), res.variant_cols(0))

@@ -87,3 +87,165 @@ def test_mcmf_solver_path_works(plane):
     )
     m = _run(small, plane, policy="nomora", solver="mcmf", seed=9)
     assert m.tasks_placed > 0
+
+
+# --------------------------------------------------------------------- #
+# QoS trigger window + hysteresis (migration controller input signal)
+
+
+def test_qos_tracker_window_hysteresis_hold():
+    from repro.distributed.straggler import QoSTracker
+
+    q = QoSTracker(threshold=0.9, window=2, clear_margin=0.02, hold_s=10.0)
+    # One bad sample never triggers; the second (window=2) does.
+    assert not q.observe(1, 0.5, 0.0)
+    assert q.observe(1, 0.5, 1.0)
+    assert 1 in q.degraded_jobs()
+    # Hysteresis band [0.9, 0.92): holds the current state either way.
+    assert q.observe(1, 0.91, 2.0)  # stays degraded
+    assert not q.observe(2, 0.91, 0.0)
+    assert not q.observe(2, 0.91, 1.0)  # never *enters* degraded in-band
+    # Clears only at threshold + clear_margin.
+    assert not q.observe(1, 0.92, 3.0)
+    assert 1 not in q.degraded_jobs()
+    # Post-migration hold-down suppresses re-triggering.
+    q.observe(3, 0.1, 0.0)
+    q.observe(3, 0.1, 1.0)
+    assert 3 in q.degraded_jobs()
+    q.migrated(3, 2.0)
+    assert 3 not in q.degraded_jobs()
+    assert not q.observe(3, 0.1, 5.0)  # held until t=12
+    assert not q.observe(3, 0.1, 12.0)  # hold expired: window restarts
+    assert q.observe(3, 0.1, 13.0)
+
+
+# --------------------------------------------------------------------- #
+# migrated_pct series stays aligned with the migration cadence
+
+
+def test_idle_migration_rounds_record_zero(wl, plane):
+    """A migration round with zero eligible movers must still append 0.0
+    to migrated_pct_per_round — the regression dropped empty rounds'
+    samples, desynchronising the series from the cadence."""
+    m = _run(
+        wl, plane, policy="nomora", backend="auction_windowed", seed=10,
+        migration_interval_s=60,
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+        migration_controller=True,
+        qos_threshold=0.0,  # nothing ever degrades -> every round is empty
+    )
+    assert len(m.migrated_pct_per_round) == 240 // 60
+    assert all(v == 0.0 for v in m.migrated_pct_per_round)
+    assert m.tasks_migrated == 0
+
+
+# --------------------------------------------------------------------- #
+# continuous migration controller (QoS trigger -> what-if lanes -> budget)
+
+
+def _hotspot_plane():
+    ev = latency.LatencyEvents(
+        hotspots=(
+            latency.DriftingHotspot(
+                start_s=30.0, end_s=220.0, rack0=0,
+                drift_racks_per_s=8.0 / 240.0, width_racks=2, multiplier=6.0,
+            ),
+        )
+    )
+    return latency.LatencyPlane.synthesize(TOPO, duration_s=240, seed=0, events=ev)
+
+
+def test_migration_controller_end_to_end(wl):
+    plane = _hotspot_plane()
+    cfg = simulator.SimConfig(
+        policy="nomora", backend="auction_windowed", seed=11,
+        migration_interval_s=15, migration_controller=True,
+        qos_threshold=0.95, qos_window=2, qos_hold_s=30.0,
+        whatif_betas=(0.0, 100.0 / 3600.0),
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+    )
+    sim = simulator.Simulator(wl, plane, cfg)
+    m = sim.run()
+    # The drifting hotspot degrades jobs; the controller reacts.
+    assert m.controller_rounds > 0
+    assert m.tasks_migrated > 0
+    # Lane 0 is the all-frozen baseline: recorded improvement can never be
+    # negative (the controller refuses rounds that don't beat it).
+    assert all(v >= 0.0 for v in m.controller_improvement_per_round)
+    assert any(v > 0.0 for v in m.degraded_jobs_per_round)
+    # Budgeted slot-safe application never oversubscribes.
+    assert sim.free_slots.min() >= 0
+    assert sim.free_slots.max() <= TOPO.slots_per_machine
+    s = m.summary()
+    assert s["controller_rounds"] == m.controller_rounds
+
+
+def test_migration_controller_respects_budget(wl):
+    plane = _hotspot_plane()
+    base = dict(
+        policy="nomora", backend="auction_windowed", seed=11,
+        migration_interval_s=15, migration_controller=True,
+        qos_threshold=0.95, qos_window=2, qos_hold_s=30.0,
+        whatif_betas=(0.0,),
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+    )
+    m_cap = _run(wl, plane, migration_budget=2, **base)
+    # <= budget moves per controller round, enforced by greedy revert.
+    assert m_cap.tasks_migrated <= 2 * len(m_cap.migrated_pct_per_round)
+
+
+def test_migration_controller_requires_capable_backend(wl, plane):
+    with pytest.raises(ValueError, match="migration_controller"):
+        simulator.Simulator(
+            wl, plane,
+            simulator.SimConfig(
+                policy="nomora", migration_controller=True,
+                params=PolicyParams(preemption=True),
+            ),
+        )
+
+
+# --------------------------------------------------------------------- #
+# whatif_betas rounds pick the lowest true-cost variant (paper Eq. 10)
+
+
+def test_whatif_round_selects_lowest_true_cost_variant(wl, plane):
+    from repro.core import scheduler_backend
+    from repro.core.policy import RoundState  # noqa: F401 (doc import)
+
+    betas = (0.0, 100.0 / 3600.0)
+    cfg = simulator.SimConfig(
+        policy="nomora", backend="auction_windowed", seed=12,
+        migration_interval_s=30, whatif_betas=betas,
+        params=PolicyParams(preemption=True, beta_scale=0.0),
+        fixed_algo_s=0.001,
+    )
+    sim = simulator.Simulator(wl, plane, cfg)
+    captured = []
+    orig = sim.backend.place_whatif
+
+    def spy(state, ctx, variants):
+        captured.append((state, list(variants)))
+        return orig(state, ctx, variants)
+
+    sim.backend.place_whatif = spy
+    sim.run()
+    assert captured, "no what-if migration round ran"
+    state, variants = captured[len(captured) // 2]
+    assert [v.beta_scale for v in variants] == list(betas)
+    _key, prog = sim.backend._program(state.n_tasks, state.n_jobs)
+    res = prog.what_if(state, variants)
+    best = res.best_variant()
+    assert best == int(np.argmin(res.true_costs))
+    # The applied placement is bit-identical to a standalone solve of the
+    # same round under the winning variant's params.
+    standalone = scheduler_backend.WindowedAuctionBackend(variants[best], TOPO)
+    ctx = scheduler_backend.RoundContext(
+        rng=np.random.default_rng(0),
+        task_counts=np.zeros(TOPO.n_machines, np.int64),
+        n_ready=state.n_tasks,
+    )
+    p = standalone.place(state, ctx)
+    np.testing.assert_array_equal(
+        np.asarray(p.cols, np.int64), res.variant_cols(best)
+    )

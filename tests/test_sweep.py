@@ -22,6 +22,9 @@ def test_preset_grid_complete():
         "failure_bursts",
         "straggler_heavy",
         "hotspot_latency",
+        "drifting_hotspot",
+        "regime_shifts",
+        "spike_storms",
         "google_trace",
     }
     with pytest.raises(KeyError):
@@ -29,6 +32,49 @@ def test_preset_grid_complete():
     gt = get_scenario("google_trace")
     assert gt.trace_kwargs is not None  # streamed-cursor workload
     assert gt.config_kwargs["streaming_metrics"] is True
+    # The dynamic presets are flagged as such; static ones are not.
+    assert all(
+        get_scenario(n).is_dynamic
+        for n in ("drifting_hotspot", "regime_shifts", "spike_storms")
+    )
+    assert not get_scenario("baseline").is_dynamic
+    assert not get_scenario("hotspot_latency").is_dynamic
+
+
+def test_dynamic_scenario_planes():
+    base = latency.LatencyPlane.synthesize(TOPO, duration_s=120, seed=0)
+    # drifting_hotspot: same series, hotspot events attached; the hot rack
+    # window drifts across the ring inside the active window.
+    p = get_scenario("drifting_hotspot").plane(base, 120)
+    assert p is not base
+    assert np.array_equal(p.series, base.series)
+    assert p.events.hotspots and p.events.regime is None
+    m_early = p.rack_multipliers(13)
+    m_late = p.rack_multipliers(100)
+    assert m_early is not None and (m_early > 1.0).any()
+    assert not np.array_equal(m_early, m_late)  # the hotspot moved
+    assert p.rack_multipliers(1) is not None  # configured -> ones, not None
+    assert np.all(p.rack_multipliers(1) == 1.0)  # outside the window
+    # regime_shifts: epoch advances at the shift times, latencies re-roll
+    # for a fraction of pairs while the tier series stays put.
+    p = get_scenario("regime_shifts").plane(base, 120)
+    assert p.events.regime is not None and not p.events.hotspots
+    assert p.regime_epoch(0) == 0 and p.regime_epoch(41) == 1
+    assert p.regime_epoch(90) == 2
+    a = np.arange(0, TOPO.n_machines - 1)
+    b = np.full_like(a, TOPO.n_machines - 1)
+    t0, _ = p._pair_fields(a, b, epoch=0)
+    t1, _ = p._pair_fields(a, b, epoch=1)
+    changed = (t0 != t1).mean()
+    assert 0.1 < changed < 0.9  # ~frac of pairs re-rolled, not all/none
+    # spike_storms: series gains additive energy on the stormy traces only
+    # (longer plane: ~30 storms/hour needs a few hundred seconds to land).
+    long = latency.LatencyPlane.synthesize(TOPO, duration_s=600, seed=0)
+    p = get_scenario("spike_storms").plane(long, 600)
+    assert (p.series >= long.series - 1e-6).all()
+    assert p.series[TIER_POD, :3].sum() > long.series[TIER_POD, :3].sum()
+    assert np.array_equal(p.series[TIER_POD, 3:], long.series[TIER_POD, 3:])
+    assert np.array_equal(p.series[TIER_RACK], long.series[TIER_RACK])
 
 
 def test_failures_deterministic_and_bounded():
