@@ -1,0 +1,238 @@
+"""Benchmark regression diff: fresh runs vs committed results JSONs.
+
+`benchmarks/results/*.json` are the committed baselines. This module
+flattens every numeric leaf of each (baseline, fresh) JSON pair into
+dotted paths (lists indexed, e.g. ``sizes.1.cost_speedup``), reports the
+percentage delta per metric, and gates a curated subset: a *gated* metric
+whose delta moves in the wrong direction by more than ``--threshold``
+percent (default 50% — generous, because the container is 1-core and its
+wall-clock timings are indicative, not stable) is a regression, and the
+CLI exits non-zero.
+
+Gating rules (first fnmatch wins; matched against ``file:dotted.path``):
+- speedups / throughputs / quality areas are higher-is-better;
+- wall-clock / RSS metrics are lower-is-better;
+- ``telemetry`` counter sections and ``obs_overhead`` percentages are
+  reported but never gated (counters legitimately change with the
+  workload; near-zero overhead percentages are unstable under %-diffing
+  — obs_overhead.py asserts its own absolute gates instead);
+- everything unmatched is reported ungated.
+
+`benchmarks/run.py` snapshots the committed results before the module
+sweep and invokes `compare_dirs` after, so one ``python -m
+benchmarks.run`` both refreshes the JSONs and flags regressions; CI runs
+the same comparison (.github/workflows/ci.yml).
+"""
+
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import shutil
+import sys
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+DEFAULT_THRESHOLD_PCT = 50.0
+
+#: (fnmatch pattern against "file:dotted.path", direction). First match
+#: wins; direction "higher" flags drops, "lower" flags rises, "skip"
+#: exempts the metric from gating entirely.
+GATES: Tuple[Tuple[str, str], ...] = (
+    ("obs_overhead:*", "skip"),  # asserts its own absolute gates
+    ("*telemetry*", "skip"),  # workload-dependent counters: report only
+    ("*:*gate*", "skip"),  # gate thresholds/flags are config, not metrics
+    ("*speedup*", "higher"),
+    ("*rounds_per_s", "higher"),
+    ("*perf_area", "higher"),
+    ("*.delta", "higher"),
+    ("*improvement*", "higher"),
+    ("*_ms", "lower"),
+    ("*wall_s*", "lower"),
+    ("*rss_mb*", "lower"),
+    ("*_ns_per_call", "lower"),
+)
+
+
+def flatten(doc, prefix: str = "") -> Dict[str, float]:
+    """Numeric leaves of a JSON document as {dotted.path: float}."""
+    out: Dict[str, float] = {}
+    if isinstance(doc, dict):
+        for k in sorted(doc):
+            out.update(flatten(doc[k], f"{prefix}{k}."))
+    elif isinstance(doc, (list, tuple)):
+        for i, v in enumerate(doc):
+            out.update(flatten(v, f"{prefix}{i}."))
+    elif isinstance(doc, bool):
+        out[prefix[:-1]] = 1.0 if doc else 0.0
+    elif isinstance(doc, (int, float)):
+        out[prefix[:-1]] = float(doc)
+    return out
+
+
+def gate_direction(key: str) -> Optional[str]:
+    """"higher" / "lower" for gated metrics, None for ungated."""
+    for pattern, direction in GATES:
+        if fnmatch.fnmatch(key, pattern):
+            return None if direction == "skip" else direction
+    return None
+
+
+def compare_docs(
+    name: str, baseline: dict, fresh: dict, threshold_pct: float
+) -> List[dict]:
+    """Per-metric rows for one (baseline, fresh) JSON pair."""
+    base_flat = flatten(baseline)
+    fresh_flat = flatten(fresh)
+    rows = []
+    for path in sorted(set(base_flat) | set(fresh_flat)):
+        key = f"{name}:{path}"
+        b, f = base_flat.get(path), fresh_flat.get(path)
+        if b is None or f is None:
+            rows.append(
+                {"key": key, "baseline": b, "fresh": f, "pct": None,
+                 "direction": None, "regression": False,
+                 "note": "new" if b is None else "removed"}
+            )
+            continue
+        pct = (f - b) / abs(b) * 100.0 if b != 0 else (0.0 if f == 0 else None)
+        direction = gate_direction(key)
+        regression = False
+        if direction is not None and pct is not None:
+            if direction == "higher":
+                regression = pct < -threshold_pct
+            else:
+                regression = pct > threshold_pct
+        rows.append(
+            {"key": key, "baseline": b, "fresh": f, "pct": pct,
+             "direction": direction, "regression": regression, "note": ""}
+        )
+    return rows
+
+
+def compare_dirs(
+    baseline_dir: str,
+    fresh_dir: str = RESULTS_DIR,
+    threshold_pct: float = DEFAULT_THRESHOLD_PCT,
+) -> List[dict]:
+    """Compare every results JSON present in either directory."""
+    names = set()
+    for d in (baseline_dir, fresh_dir):
+        if os.path.isdir(d):
+            names.update(
+                n[:-5] for n in os.listdir(d) if n.endswith(".json")
+            )
+    rows: List[dict] = []
+    for name in sorted(names):
+        b_path = os.path.join(baseline_dir, f"{name}.json")
+        f_path = os.path.join(fresh_dir, f"{name}.json")
+        if not os.path.exists(b_path):
+            rows.append({"key": f"{name}:*", "baseline": None, "fresh": None,
+                         "pct": None, "direction": None, "regression": False,
+                         "note": "new file"})
+            continue
+        if not os.path.exists(f_path):
+            rows.append({"key": f"{name}:*", "baseline": None, "fresh": None,
+                         "pct": None, "direction": None, "regression": False,
+                         "note": "missing fresh run"})
+            continue
+        with open(b_path) as fh:
+            baseline = json.load(fh)
+        with open(f_path) as fh:
+            fresh = json.load(fh)
+        rows.extend(compare_docs(name, baseline, fresh, threshold_pct))
+    return rows
+
+
+def snapshot_results(results_dir: str = RESULTS_DIR) -> str:
+    """Copy the committed results JSONs to a temp dir (the baseline a
+    subsequent `compare_dirs` diffs fresh runs against)."""
+    snap = tempfile.mkdtemp(prefix="bench_baseline_")
+    if os.path.isdir(results_dir):
+        for n in os.listdir(results_dir):
+            if n.endswith(".json"):
+                shutil.copy2(os.path.join(results_dir, n), snap)
+    return snap
+
+
+def format_rows(rows: List[dict], verbose: bool = False) -> List[str]:
+    lines = []
+    for r in rows:
+        if r["note"] in ("new", "new file") and not verbose:
+            continue
+        if r["pct"] is None:
+            if verbose or r["note"]:
+                lines.append(f"{r['key']}: {r['note'] or 'n/a'}")
+            continue
+        gated = r["direction"] or "ungated"
+        if r["regression"] or verbose or abs(r["pct"]) > 10.0:
+            lines.append(
+                f"{'REGRESSION ' if r['regression'] else ''}{r['key']}: "
+                f"{r['baseline']:.4g} -> {r['fresh']:.4g} "
+                f"({r['pct']:+.1f}%, {gated})"
+            )
+    return lines
+
+
+def run(baseline_dir: str, threshold_pct: float = DEFAULT_THRESHOLD_PCT):
+    """benchmarks/run.py hook: CSV rows + the regression list."""
+    rows = compare_dirs(baseline_dir, RESULTS_DIR, threshold_pct)
+    regressions = [r for r in rows if r["regression"]]
+    csv_rows = [
+        (
+            f"compare_{r['key'].replace(':', '_').replace('.', '_')}",
+            0.0,
+            f"{r['baseline']:.4g}->{r['fresh']:.4g}({r['pct']:+.1f}%)",
+        )
+        for r in regressions
+    ]
+    n_metrics = sum(1 for r in rows if r["pct"] is not None)
+    csv_rows.append(
+        (
+            "compare_summary",
+            0.0,
+            f"{n_metrics}metrics;{len(regressions)}regressions"
+            f";threshold{threshold_pct:.0f}%",
+        )
+    )
+    return csv_rows, regressions
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--baseline", default=None,
+        help="baseline results dir (default: the committed "
+        "benchmarks/results — use a snapshot when fresh runs overwrote it)",
+    )
+    ap.add_argument(
+        "--fresh", default=RESULTS_DIR, help="fresh results dir"
+    )
+    ap.add_argument(
+        "--threshold", type=float, default=DEFAULT_THRESHOLD_PCT,
+        help="gated regression threshold in percent (default %(default)s)",
+    )
+    ap.add_argument(
+        "-v", "--verbose", action="store_true",
+        help="print every metric, not just regressions/large moves",
+    )
+    args = ap.parse_args(argv)
+    baseline = args.baseline or RESULTS_DIR
+    rows = compare_dirs(baseline, args.fresh, args.threshold)
+    for line in format_rows(rows, verbose=args.verbose):
+        print(line)
+    regressions = [r for r in rows if r["regression"]]
+    n_metrics = sum(1 for r in rows if r["pct"] is not None)
+    print(
+        f"compared {n_metrics} metrics: {len(regressions)} regression(s) "
+        f"past {args.threshold:.0f}%"
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,6 +29,8 @@ from __future__ import annotations
 import json
 import os
 
+from repro import obs
+
 from . import common
 
 RESULTS_PATH = os.path.join(
@@ -89,7 +91,13 @@ def run():
             continue
         plane = scn.plane(base_plane, common.DURATION_S)
         _, m_off = _simulate(scn, plane, wl, topo, on=False)
-        sim_on, m_on = _simulate(scn, plane, wl, topo, on=True)
+        # The ON replay runs instrumented; its deterministic counters
+        # (solver/controller/QoS activity) become the scenario's
+        # ``telemetry`` section (reported by compare.py, never %-gated).
+        with obs.scope():
+            before = obs.counters()
+            sim_on, m_on = _simulate(scn, plane, wl, topo, on=True)
+            telemetry = obs.counters_since(before)
         s_off, s_on = m_off.summary(), m_on.summary()
         off_area = s_off["avg_app_perf_area"]
         on_area = s_on["avg_app_perf_area"]
@@ -112,6 +120,7 @@ def run():
             "oracle": stats,
             "controller_beats_no_migration": quality_ok,
             "device_resident_updates": resident_ok,
+            "telemetry": telemetry,
         }
         rows.append(
             (

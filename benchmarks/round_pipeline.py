@@ -218,6 +218,34 @@ def bench_window(n_machines: int) -> dict:
     }
 
 
+def _window_telemetry(n_machines: int) -> dict:
+    """Deterministic telemetry counters for one instrumented window pass
+    (the benchmark JSON's ``telemetry`` section — compare.py reports
+    these but never %-gates them)."""
+    from repro import obs
+    from repro.core import perf_model, policy, topology
+    from repro.core.scheduler_backend import WindowedAuctionBackend
+
+    topo = topology.Topology(
+        n_machines=n_machines, machines_per_rack=48, racks_per_pod=16,
+        slots_per_machine=4,
+    )
+    rng = np.random.default_rng(SEED)
+    states = [
+        _round_state(rng, topo, WINDOW_TASKS, WINDOW_JOBS)
+        for _ in range(WINDOW_ROUNDS)
+    ]
+    backend = WindowedAuctionBackend(
+        policy.PolicyParams(preemption=True), topo,
+        perf_model.perf_lut_table(), device=True,
+    )
+    backend.place_window(states)  # warm (jit compiles stay out of counters)
+    with obs.scope():
+        before = obs.counters()
+        backend.place_window(states)
+        return obs.counters_since(before)
+
+
 def run():
     rows = []
     payload = {"sizes": []}
@@ -254,6 +282,7 @@ def run():
     payload["accept_cost_speedup_at_1000"] = gate["cost_speedup"]
     wgate = payload["windows"][0]
     payload["accept_window_speedup_at_4096"] = wgate["window_speedup"]
+    payload["telemetry"] = _window_telemetry(WINDOW_SIZES[0])
     os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
     with open(RESULTS_PATH, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)

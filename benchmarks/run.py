@@ -12,6 +12,11 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures covered:
   (extra) round_pipeline     - host-numpy vs fused on-device round
   (extra) trace_scale        - trace replay peak-RSS / wall gates
   (extra) kernel_bench       - scheduler kernel microbenchmarks
+  (extra) obs_overhead       - telemetry-plane zero-cost/overhead gates
+
+After the module sweep, `compare` diffs the fresh results JSONs against
+the committed baselines snapshotted before the run and exits non-zero on
+gated regressions (see benchmarks/compare.py for the gate table).
 
 REPRO_BENCH_SCALE={small,medium,paper} controls simulation size.
 """
@@ -25,9 +30,11 @@ import time
 def main() -> None:
     from . import (
         algo_runtime,
+        compare,
         kernel_bench,
         migration_quality,
         migrations,
+        obs_overhead,
         perf_models,
         placement_latency,
         placement_quality,
@@ -49,7 +56,11 @@ def main() -> None:
         ("round_pipeline", round_pipeline),
         ("trace_scale", trace_scale),
         ("kernel_bench", kernel_bench),
+        ("obs_overhead", obs_overhead),
     ]
+    # The committed results are the regression baseline; the modules
+    # overwrite them in place, so snapshot first.
+    baseline_dir = compare.snapshot_results()
     print("name,us_per_call,derived")
     for name, mod in modules:
         t0 = time.time()
@@ -61,6 +72,11 @@ def main() -> None:
         for row_name, us, derived in rows:
             print(f"{row_name},{us:.1f},{derived}")
         print(f"{name}_wall_s,{(time.time()-t0)*1e6:.0f},total", file=sys.stderr)
+    csv_rows, regressions = compare.run(baseline_dir)
+    for row_name, us, derived in csv_rows:
+        print(f"{row_name},{us:.1f},{derived}")
+    if regressions:
+        sys.exit(1)
 
 
 if __name__ == "__main__":

@@ -102,11 +102,23 @@ def _child_main(payload: dict) -> None:
         fixed_algo_s=0.0,
         streaming_metrics=True,
     )
+    if payload.get("obs"):
+        # Instrumented replay: deterministic counters ride back in the
+        # result line as the cell's ``telemetry`` section. The wall gates
+        # have ample headroom for the <5% instrumented overhead
+        # (benchmarks/obs_overhead.py pins the bound).
+        from repro import obs
+
+        obs.set_enabled(True)
+        obs.reset()
     t0 = time.perf_counter()
     sim = Simulator(cursor, plane, cfg)
     metrics = sim.run()
     replay_s = time.perf_counter() - t0
     summary = metrics.summary()
+    telemetry = None
+    if payload.get("obs"):
+        telemetry = obs.deterministic_counters(obs.counters())
     peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
     # ru_maxrss is kilobytes on Linux but bytes on macOS.
     peak_mb = peak / 1024.0**2 if sys.platform == "darwin" else peak / 1024.0
@@ -122,6 +134,7 @@ def _child_main(payload: dict) -> None:
                 "rounds": int(summary["rounds"]),
                 "avg_app_perf_area": summary["avg_app_perf_area"],
                 "response_time_s_p90": summary["response_time_s_p90"],
+                "telemetry": telemetry,
             }
         )
     )
@@ -149,7 +162,7 @@ def _run_child(payload: dict) -> dict:
     return json.loads(out.stdout.strip().splitlines()[-1])
 
 
-def _run_cell(name, configs, policy, backend):
+def _run_cell(name, configs, policy, backend, obs_on=False):
     machines, mpr, rpp, duration_s, util, rss_gate_mb, wall_gate_s = configs[SCALE]
     payload = {
         "machines": machines,
@@ -162,6 +175,8 @@ def _run_cell(name, configs, policy, backend):
         payload["policy"] = policy
     if backend is not None:
         payload["backend"] = backend
+    if obs_on:
+        payload["obs"] = True
     res = _run_child(payload)
     rss_ok = res["peak_rss_mb"] <= rss_gate_mb
     wall_ok = res["replay_s"] <= wall_gate_s
@@ -180,7 +195,14 @@ def _run_cell(name, configs, policy, backend):
 def run():
     cells = [
         _run_cell("replay_machinery", CONFIGS, POLICY, None),
-        _run_cell("nomora_policy", NOMORA_CONFIGS, "nomora", NOMORA_BACKEND),
+        # The solver-in-the-loop cell replays instrumented: its result's
+        # ``telemetry`` section pins the solver/round counter profile at
+        # trace scale (the RSS/wall gates keep their headroom — the
+        # instrumented overhead bound is benchmarks/obs_overhead.py's).
+        _run_cell(
+            "nomora_policy", NOMORA_CONFIGS, "nomora", NOMORA_BACKEND,
+            obs_on=True,
+        ),
     ]
     result = {"scale": SCALE, "cells": cells}
     with open(RESULTS_PATH, "w") as f:

@@ -76,6 +76,7 @@ class DeviceLatencyOracle:
         self.round_uploads = 0
         self.uploaded_floats = 0
         self.decomp_builds = 0
+        self.decomp_hits = 0  # LRU cache hits (no host->device upload)
         self.decomp_floats = 0
         self.rows_served = 0  # (root, M) rows produced on device
 
@@ -86,6 +87,7 @@ class DeviceLatencyOracle:
         hit = self._decomp.get(key)
         if hit is not None:
             self._decomp.move_to_end(key)
+            self.decomp_hits += 1
             return hit
         sel, coeff = self.plane.row_decomposition(machine, epoch)
         dev = (jnp.asarray(sel), jnp.asarray(coeff))
@@ -145,6 +147,7 @@ class DeviceLatencyOracle:
             "round_uploads": self.round_uploads,
             "uploaded_floats": self.uploaded_floats,
             "decomp_builds": self.decomp_builds,
+            "decomp_hits": self.decomp_hits,
             "decomp_floats": self.decomp_floats,
             "rows_served": self.rows_served,
             # What a host rebuild would have shipped: every served row is

@@ -20,9 +20,34 @@ tolerance) via ``SimConfig(streaming_metrics=True)``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
 import numpy as np
+
+#: The shared ``summary()`` schema: (summary-key prefix, accumulator
+#: attribute) pairs iterated by BOTH `SimMetrics.summary` and
+#: `metrics_stream.StreamingSimMetrics.summary` — the two classes are
+#: drop-ins for each other, and routing both through this one constant
+#: (plus `SUMMARY_SCALARS`) pins the key-set contract structurally
+#: (tests/test_obs.py asserts the emitted key sets stay identical).
+SUMMARY_SERIES: Tuple[Tuple[str, str], ...] = (
+    ("algo_runtime_s", "algo_runtime_s"),
+    ("placement_latency_s", "placement_latency_s"),
+    ("response_time_s", "response_time_s"),
+    ("migrated_pct", "migrated_pct_per_round"),
+    ("controller_improvement", "controller_improvement_per_round"),
+    ("degraded_jobs", "degraded_jobs_per_round"),
+)
+
+#: Scalar summary keys shared by both metrics classes.
+SUMMARY_SCALARS: Tuple[str, ...] = (
+    "avg_app_perf_area",
+    "jobs_measured",
+    "tasks_placed",
+    "tasks_migrated",
+    "rounds",
+    "controller_rounds",
+)
 
 
 def cdf_area(per_job_perf: np.ndarray) -> float:
@@ -35,7 +60,13 @@ def cdf_area(per_job_perf: np.ndarray) -> float:
 def percentiles(values, ps=(50, 90, 99)) -> Dict[str, float]:
     v = np.asarray(list(values), dtype=np.float64)
     if v.size == 0:
-        return {f"p{p}": float("nan") for p in ps} | {"max": float("nan")}
+        # Same key set as the populated branch (schema stability: summary
+        # consumers and the streaming drop-in must see identical keys
+        # whether or not the series ever received a sample).
+        return {f"p{p}": float("nan") for p in ps} | {
+            "max": float("nan"),
+            "mean": float("nan"),
+        }
     out = {f"p{p}": float(np.percentile(v, p)) for p in ps}
     out["max"] = float(v.max())
     out["mean"] = float(v.mean())
@@ -82,14 +113,7 @@ class SimMetrics:
             "rounds": float(self.rounds),
             "controller_rounds": float(self.controller_rounds),
         }
-        for name, series in (
-            ("algo_runtime_s", self.algo_runtime_s),
-            ("placement_latency_s", self.placement_latency_s),
-            ("response_time_s", self.response_time_s),
-            ("migrated_pct", self.migrated_pct_per_round),
-            ("controller_improvement", self.controller_improvement_per_round),
-            ("degraded_jobs", self.degraded_jobs_per_round),
-        ):
-            for k, v in percentiles(series).items():
+        for name, attr in SUMMARY_SERIES:
+            for k, v in percentiles(getattr(self, attr)).items():
                 out[f"{name}_{k}"] = v
         return out

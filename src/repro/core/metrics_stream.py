@@ -45,7 +45,7 @@ from typing import Dict, Iterable, Optional
 
 import numpy as np
 
-from .metrics import cdf_area
+from .metrics import SUMMARY_SERIES, cdf_area
 
 # Log-histogram domain: covers microsecond latencies through multi-week
 # response times (seconds) and percent metrics with ~1.4%-wide bins.
@@ -367,7 +367,10 @@ class StreamSeries:
     def summary(self, ps=(50, 90, 99)) -> Dict[str, float]:
         """Same keys (and empty-series shape) as `metrics.percentiles`."""
         if self.count == 0:
-            return {f"p{p}": float("nan") for p in ps} | {"max": float("nan")}
+            return {f"p{p}": float("nan") for p in ps} | {
+                "max": float("nan"),
+                "mean": float("nan"),
+            }
         out = {f"p{p}": self.quantile(p) for p in ps}
         out["max"] = self.max
         out["mean"] = self.mean
@@ -466,15 +469,8 @@ class StreamingSimMetrics:
     def merge(self, other: "StreamingSimMetrics") -> None:
         """Fold another shard's accumulators in (order-invariant up to
         float summation in the means; quantiles/counts/max exact)."""
-        for name in (
-            "algo_runtime_s",
-            "placement_latency_s",
-            "response_time_s",
-            "migrated_pct_per_round",
-            "controller_improvement_per_round",
-            "degraded_jobs_per_round",
-        ):
-            getattr(self, name).merge(getattr(other, name))
+        for _name, attr in SUMMARY_SERIES:
+            getattr(self, attr).merge(getattr(other, attr))
         self.tasks_placed += other.tasks_placed
         self.tasks_migrated += other.tasks_migrated
         self.rounds += other.rounds
@@ -510,14 +506,7 @@ class StreamingSimMetrics:
             "rounds": float(self.rounds),
             "controller_rounds": float(self.controller_rounds),
         }
-        for name, series in (
-            ("algo_runtime_s", self.algo_runtime_s),
-            ("placement_latency_s", self.placement_latency_s),
-            ("response_time_s", self.response_time_s),
-            ("migrated_pct", self.migrated_pct_per_round),
-            ("controller_improvement", self.controller_improvement_per_round),
-            ("degraded_jobs", self.degraded_jobs_per_round),
-        ):
-            for k, v in series.summary().items():
+        for name, attr in SUMMARY_SERIES:
+            for k, v in getattr(self, attr).summary().items():
                 out[f"{name}_{k}"] = v
         return out

@@ -14,14 +14,16 @@ first and is mirrored here only when the semantics themselves change.
 
 from __future__ import annotations
 
-import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
+
 from . import auction, flow_network, mcmf, perf_model
 from .latency import LatencyPlane
 from .metrics import SimMetrics
+from .scheduler_backend import solver_clock
 from .policy import (
     RoundState,
     dense_costs,
@@ -232,14 +234,16 @@ class ReferenceSimulator:
         ][: self.cfg.max_round_tasks]
         if not ready:
             return
-        t0 = time.perf_counter()
-        if random:
-            cols = random_placement(self.rng, len(ready), self.free_slots)
-        else:
-            cols = load_spreading_placement(
-                self.task_counts, self.free_slots, len(ready)
-            )
-        algo_s = self._algo_s(time.perf_counter() - t0)
+        with solver_clock(
+            "solver.reference.baseline", random=bool(random)
+        ) as clk:
+            if random:
+                cols = random_placement(self.rng, len(ready), self.free_slots)
+            else:
+                cols = load_spreading_placement(
+                    self.task_counts, self.free_slots, len(ready)
+                )
+        algo_s = self._algo_s(clk.elapsed)
         self.metrics.algo_runtime_s.append(algo_s)
         self.metrics.rounds += 1
         for task, m in zip(ready, cols):
@@ -328,16 +332,17 @@ class ReferenceSimulator:
         state = self._build_round_state(ready, movers, t)
         if cfg.policy in ("random_solver", "spread_solver"):
             w = self._baseline_costs(state)
-            t0 = time.perf_counter()
-            res = auction.solve_transportation(
-                w,
-                state.free_slots.astype(np.int64),
-                state.n_machines,
-                state.n_machines + state.task_job.astype(np.int64),
-                slots_per_machine=self.topo.slots_per_machine,
-                exact=False,
-            )
-            algo_s = self._algo_s(time.perf_counter() - t0)
+            with solver_clock(f"solver.reference.{cfg.policy}") as clk:
+                res = auction.solve_transportation(
+                    w,
+                    state.free_slots.astype(np.int64),
+                    state.n_machines,
+                    state.n_machines + state.task_job.astype(np.int64),
+                    slots_per_machine=self.topo.slots_per_machine,
+                    exact=False,
+                )
+            obs.add("auction.iterations", res.iterations)
+            algo_s = self._algo_s(clk.elapsed)
             self.metrics.algo_runtime_s.append(algo_s)
             self.metrics.rounds += 1
             M = state.n_machines
@@ -348,28 +353,31 @@ class ReferenceSimulator:
             return
         costs = dense_costs(state, self.topo, cfg.params, self.lut)
 
-        t0 = time.perf_counter()
-        if cfg.solver == "auction":
-            M = state.n_machines
-            res = auction.solve_transportation(
-                costs.w,
-                costs.col_capacity[:M],
-                M,
-                M + state.task_job.astype(np.int64),
-                warm_prices=self.warm_prices,
-                slots_per_machine=self.topo.slots_per_machine,
-                tie_jitter=9,
-                exact=False,  # <=1 cost-unit/task slack; 450x fewer tie crawls
-            )
-            cols = res.assigned_col
-            self.warm_prices = res.prices
-        else:
-            g = flow_network.build_flow_graph(state, self.topo, cfg.params, costs)
-            fr = mcmf.min_cost_max_flow(
-                g.src, g.dst, g.cap, g.cost, g.source, g.sink, g.n_nodes
-            )
-            cols = flow_network.extract_assignment(g, fr.flow, state)
-        algo_s = self._algo_s(time.perf_counter() - t0)
+        with solver_clock(f"solver.reference.{cfg.solver}") as clk:
+            if cfg.solver == "auction":
+                M = state.n_machines
+                res = auction.solve_transportation(
+                    costs.w,
+                    costs.col_capacity[:M],
+                    M,
+                    M + state.task_job.astype(np.int64),
+                    warm_prices=self.warm_prices,
+                    slots_per_machine=self.topo.slots_per_machine,
+                    tie_jitter=9,
+                    exact=False,  # <=1 cost-unit/task slack; 450x fewer tie crawls
+                )
+                cols = res.assigned_col
+                self.warm_prices = res.prices
+                obs.add("auction.iterations", res.iterations)
+            else:
+                g = flow_network.build_flow_graph(
+                    state, self.topo, cfg.params, costs
+                )
+                fr = mcmf.min_cost_max_flow(
+                    g.src, g.dst, g.cap, g.cost, g.source, g.sink, g.n_nodes
+                )
+                cols = flow_network.extract_assignment(g, fr.flow, state)
+        algo_s = self._algo_s(clk.elapsed)
         self.metrics.algo_runtime_s.append(algo_s)
         self.metrics.rounds += 1
 

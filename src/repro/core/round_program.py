@@ -62,11 +62,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from . import auction, perf_model, policy
 from .policy import MAX_MACHINE_COST, PolicyParams, RoundState
@@ -487,6 +490,22 @@ class RoundProgram:
                         f"{bound} * {scale} * 4 >= 2^24"
                     )
 
+    def _window_upload_bytes(self, window: RoundWindow) -> int:
+        """Host bytes `_window_arrays` ships to device for this window.
+
+        Device-resident latency rows (`DeviceLatencyOracle` path) are
+        already on device — `stack_round_states` scatters them with a
+        device-side ``.at[].set`` — so only numpy-held fields count."""
+        total = 0
+        for field in (
+            window.task_job, window.perf_idx, window.root_latency,
+            window.wait_s, window.run_s, window.cur_machine,
+            window.active, window.free_slots, window.scale,
+        ):
+            if isinstance(field, np.ndarray):
+                total += field.nbytes
+        return total
+
     def _window_arrays(self, window: RoundWindow):
         return (
             jnp.asarray(window.task_job),
@@ -510,6 +529,49 @@ class RoundProgram:
             beta_scale=jnp.float32(params.beta_scale),
         )
 
+    def _record_window_spans(
+        self, t0_ns: int, window: RoundWindow, iters_np: np.ndarray
+    ) -> None:
+        """Reconstruct per-round sub-slices of one fused window dispatch.
+
+        The scanned window is a single XLA program — no host code runs
+        between rounds, so individual rounds cannot be clocked directly.
+        Instead the dispatch wall time is split across rounds
+        proportionally to each round's auction iteration count (scan
+        metadata the program already returns) and recorded as synthetic
+        sub-slices nested inside one ``round_program.advance`` span.
+        """
+        t1_ns = time.perf_counter_ns()
+        R = window.n_rounds
+        total_ns = t1_ns - t0_ns
+        obs.record_span(
+            "round_program.advance",
+            t0_ns,
+            total_ns,
+            {"rounds": R, "bucket_tasks": self.n_pad_tasks,
+             "bucket_jobs": self.n_pad_jobs},
+        )
+        iters = iters_np.astype(np.int64).reshape(-1)[:R]
+        obs.add("window.rounds", R)
+        obs.add("auction.iterations", int(iters.sum()))
+        obs.add(
+            "auction.pad_waste_tasks",
+            sum(self.n_pad_tasks - T for T in window.n_tasks),
+        )
+        weights = np.maximum(iters.astype(np.float64), 1.0)
+        edges = t0_ns + np.round(
+            np.cumsum(np.concatenate([[0.0], weights])) / weights.sum() * total_ns
+        ).astype(np.int64)
+        for r in range(R):
+            obs.record_span(
+                "round_program.round",
+                int(edges[r]),
+                int(edges[r + 1] - edges[r]),
+                {"round": r, "iterations": int(iters[r]),
+                 "n_tasks": window.n_tasks[r]},
+                depth=1,
+            )
+
     def advance(
         self, state: DeviceRoundState, window: RoundWindow
     ) -> Tuple[DeviceRoundState, WindowResult]:
@@ -521,10 +583,16 @@ class RoundProgram:
         bounds) happens around the dispatch, never inside it.
         """
         self._check_cost_bound(window)
+        telemetry = obs.enabled()
+        if telemetry:
+            obs.add("h2d.upload_bytes", self._window_upload_bytes(window))
+            t0_ns = time.perf_counter_ns()
         new_state, (assigned, iters, cost, true_cost) = self._advance_jit(
             state, self._window_arrays(window), self._params_scalars(self.params)
         )
         iters_np = np.asarray(iters)
+        if telemetry:
+            self._record_window_spans(t0_ns, window, iters_np)
         if int(iters_np.max(initial=0)) >= self.max_iters:
             raise RuntimeError(
                 f"auction hit the iteration cap ({self.max_iters}) inside the window"
@@ -590,14 +658,20 @@ class RoundProgram:
         arrs = self._window_arrays(window)
         round_arrays = tuple(a[0] for a in arrs[:7])
         free_slots = arrs[7][0]
-        assigned, iters, cost, true_cost, stay_cost = self._whatif_jit(
-            free_slots,
-            round_arrays,
-            _pad_params(variants),
-            jnp.asarray(masks),
-            jnp.int32(scale),
-        )
-        iters_np = np.asarray(iters)
+        if obs.enabled():
+            obs.add("h2d.upload_bytes", self._window_upload_bytes(window))
+            obs.add("whatif.lanes", K)
+        with obs.span("round_program.whatif", lanes=K, n_tasks=T):
+            assigned, iters, cost, true_cost, stay_cost = self._whatif_jit(
+                free_slots,
+                round_arrays,
+                _pad_params(variants),
+                jnp.asarray(masks),
+                jnp.int32(scale),
+            )
+            iters_np = np.asarray(iters)
+        if obs.enabled():
+            obs.add("auction.iterations", int(iters_np.astype(np.int64).sum()))
         if int(iters_np.max(initial=0)) >= self.max_iters:
             raise RuntimeError(
                 f"auction hit the iteration cap ({self.max_iters}) in a what-if lane"

@@ -14,6 +14,19 @@ syncs its device cost arrays before starting the clock), matching the
 paper's Fig. 6 "algorithm runtime" and the pre-refactor measurement
 points.
 
+``algo_s`` semantics (unified via `solver_clock`): every backend times
+exactly its solver region through the one `solver_clock` helper, which
+doubles as the ``solver.<backend>`` telemetry span (`repro.obs`). The
+reported number is always **per scheduling round**:
+
+- single-round entry points (`place`, `place_whatif`, `whatif_result`)
+  report the raw wall time of their one solve/dispatch;
+- `WindowedAuctionBackend.place_window` runs R rounds in ONE fused
+  dispatch and reports ``elapsed / R`` on every returned `Placement`
+  (`solver_clock`'s ``per_round``) — the amortised per-round cost,
+  comparable with R sequential `place` calls, *not* the whole window's
+  wall time repeated R times.
+
 Backends:
 
 - `AuctionBackend` (name ``auction``) — the production path: fused
@@ -42,12 +55,15 @@ an instance; `core/sweep.py` exposes the same names per grid cell via the
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Optional
 
 import jax
 import numpy as np
+
+from repro import obs
 
 from . import auction, flow_network, mcmf, perf_model
 from .policy import (
@@ -61,6 +77,39 @@ from .policy import (
     random_placement,
 )
 from .topology import Topology
+
+
+class _SolverClock:
+    """Elapsed-time handle yielded by `solver_clock`."""
+
+    __slots__ = ("elapsed",)
+
+    def __init__(self) -> None:
+        self.elapsed = 0.0
+
+    def per_round(self, n_rounds: int) -> float:
+        """Amortised per-round time for fused multi-round dispatches."""
+        return self.elapsed / max(int(n_rounds), 1)
+
+
+@contextlib.contextmanager
+def solver_clock(name: str, **span_args):
+    """The one ``algo_s`` measurement point shared by every backend.
+
+    Wraps the timed region in an ``obs.span`` (zero-cost when telemetry
+    is disabled) and exposes the measured wall time as ``clk.elapsed``
+    after the block exits. Callers must perform any device sync *before*
+    entering (e.g. ``jax.block_until_ready`` on cost arrays) so the clock
+    covers solver work only — the span inherits exactly the legacy
+    `time.perf_counter()` window of each backend.
+    """
+    clk = _SolverClock()
+    with obs.span(name, **span_args):
+        t0 = time.perf_counter()
+        try:
+            yield clk
+        finally:
+            clk.elapsed = time.perf_counter() - t0
 
 
 @dataclasses.dataclass
@@ -110,9 +159,9 @@ class RandomBackend(SchedulerBackend):
     caps_admission = False
 
     def place(self, state: RoundState, ctx: RoundContext) -> Placement:
-        t0 = time.perf_counter()
-        cols = random_placement(ctx.rng, state.n_tasks, state.free_slots)
-        return Placement(cols=cols, algo_s=time.perf_counter() - t0)
+        with solver_clock("solver.random") as clk:
+            cols = random_placement(ctx.rng, state.n_tasks, state.free_slots)
+        return Placement(cols=cols, algo_s=clk.elapsed)
 
 
 class LoadSpreadingBackend(SchedulerBackend):
@@ -121,11 +170,11 @@ class LoadSpreadingBackend(SchedulerBackend):
     caps_admission = False
 
     def place(self, state: RoundState, ctx: RoundContext) -> Placement:
-        t0 = time.perf_counter()
-        cols = load_spreading_placement(
-            ctx.task_counts, state.free_slots, state.n_tasks
-        )
-        return Placement(cols=cols, algo_s=time.perf_counter() - t0)
+        with solver_clock("solver.load_spreading") as clk:
+            cols = load_spreading_placement(
+                ctx.task_counts, state.free_slots, state.n_tasks
+            )
+        return Placement(cols=cols, algo_s=clk.elapsed)
 
 
 class _SolverBaselineBackend(SchedulerBackend):
@@ -151,18 +200,19 @@ class _SolverBaselineBackend(SchedulerBackend):
             np.int64
         )
         w[np.arange(T), M + state.task_job] = a
-        t0 = time.perf_counter()
-        res = auction.solve_transportation(
-            w,
-            state.free_slots.astype(np.int64),
-            M,
-            M + state.task_job.astype(np.int64),
-            slots_per_machine=self.topo.slots_per_machine,
-            exact=False,
-        )
+        with solver_clock(f"solver.{self.name}") as clk:
+            res = auction.solve_transportation(
+                w,
+                state.free_slots.astype(np.int64),
+                M,
+                M + state.task_job.astype(np.int64),
+                slots_per_machine=self.topo.slots_per_machine,
+                exact=False,
+            )
+        obs.add("auction.iterations", res.iterations)
         return Placement(
             cols=np.asarray(res.assigned_col, np.int64),
-            algo_s=time.perf_counter() - t0,
+            algo_s=clk.elapsed,
             objective=res.total_cost,
         )
 
@@ -229,19 +279,20 @@ class AuctionBackend(SchedulerBackend):
         if not self.device:
             costs = dense_costs(state, self.topo, self.params, self.lut)
             M = state.n_machines
-            t0 = time.perf_counter()
-            res = auction.solve_transportation(
-                costs.w,
-                costs.col_capacity[:M],
-                M,
-                M + state.task_job.astype(np.int64),
-                slots_per_machine=self.topo.slots_per_machine,
-                tie_jitter=self.tie_jitter,
-                exact=self.exact,
-            )
+            with solver_clock("solver.auction_host") as clk:
+                res = auction.solve_transportation(
+                    costs.w,
+                    costs.col_capacity[:M],
+                    M,
+                    M + state.task_job.astype(np.int64),
+                    slots_per_machine=self.topo.slots_per_machine,
+                    tie_jitter=self.tie_jitter,
+                    exact=self.exact,
+                )
+            obs.add("auction.iterations", res.iterations)
             return Placement(
                 cols=np.asarray(res.assigned_col, np.int64),
-                algo_s=time.perf_counter() - t0,
+                algo_s=clk.elapsed,
                 objective=res.total_cost,
             )
 
@@ -260,26 +311,34 @@ class AuctionBackend(SchedulerBackend):
             interpret=self.interpret,
         )
         jax.block_until_ready((w_m, a))
-        t0 = time.perf_counter()
-        # Host-side cost bound: machine arcs are <= 10000 by construction,
-        # the unscheduled column is known from the (host) wait times.
-        a_max = int(self.params.omega * float(state.wait_s.max(initial=0.0))
-                    + self.params.gamma) + 1
-        res = auction.solve_transportation_device(
-            w_m,
-            a,
-            state.n_tasks,
-            state.free_slots,
-            state.n_machines,
-            state.task_job,
-            slots_per_machine=self.topo.slots_per_machine,
-            tie_jitter=self.tie_jitter,
-            exact=self.exact,
-            cost_bound=max(MAX_MACHINE_COST, a_max),
-        )
+        if obs.enabled():
+            # Bucket pad waste: padded rows solved beyond the real tasks.
+            obs.add(
+                "auction.pad_waste_tasks",
+                auction._bucket(state.n_tasks) - state.n_tasks,
+            )
+        with solver_clock("solver.auction") as clk:
+            # Host-side cost bound: machine arcs are <= 10000 by
+            # construction, the unscheduled column is known from the
+            # (host) wait times.
+            a_max = int(self.params.omega * float(state.wait_s.max(initial=0.0))
+                        + self.params.gamma) + 1
+            res = auction.solve_transportation_device(
+                w_m,
+                a,
+                state.n_tasks,
+                state.free_slots,
+                state.n_machines,
+                state.task_job,
+                slots_per_machine=self.topo.slots_per_machine,
+                tie_jitter=self.tie_jitter,
+                exact=self.exact,
+                cost_bound=max(MAX_MACHINE_COST, a_max),
+            )
+        obs.add("auction.iterations", res.iterations)
         return Placement(
             cols=np.asarray(res.assigned_col, np.int64),
-            algo_s=time.perf_counter() - t0,
+            algo_s=clk.elapsed,
             objective=res.total_cost,
         )
 
@@ -363,13 +422,12 @@ class WindowedAuctionBackend(AuctionBackend):
             exact=self.exact,
         )
         dstate = self._state_for(key, prog, state.free_slots)
-        t0 = time.perf_counter()
-        dstate, res = prog.advance(dstate, window)
-        algo_s = time.perf_counter() - t0
+        with solver_clock("solver.auction_windowed") as clk:
+            dstate, res = prog.advance(dstate, window)
         self._states[key] = dstate
         return Placement(
             cols=res.round_cols(0),
-            algo_s=algo_s,
+            algo_s=clk.elapsed,
             objective=res.round_objective(0),
         )
 
@@ -406,9 +464,13 @@ class WindowedAuctionBackend(AuctionBackend):
             window.free_slots[0] = 0
         else:
             dstate = self._state_for(key, prog, states[0].free_slots)
-        t0 = time.perf_counter()
-        dstate, res = prog.advance(dstate, window)
-        algo_s = (time.perf_counter() - t0) / len(states)
+        with solver_clock(
+            "solver.auction_windowed.window", rounds=len(states), chain=chain
+        ) as clk:
+            dstate, res = prog.advance(dstate, window)
+        # Per-round attribution: one fused dispatch amortised over the
+        # window (see the module docstring's algo_s contract).
+        algo_s = clk.per_round(len(states))
         if not chain:
             # Chained windows seed a fresh carry per call; caching theirs
             # would just pin device buffers nothing ever reads again.
@@ -430,13 +492,15 @@ class WindowedAuctionBackend(AuctionBackend):
         cost. With a single variant this is `place` under that variant's
         params, bit for bit."""
         _key, prog = self._program(state.n_tasks, state.n_jobs)
-        t0 = time.perf_counter()
-        res = prog.what_if(state, list(variants))
-        algo_s = time.perf_counter() - t0
+        variants = list(variants)
+        with solver_clock(
+            "solver.auction_windowed.whatif", lanes=len(variants)
+        ) as clk:
+            res = prog.what_if(state, variants)
         best = res.best_variant()
         return Placement(
             cols=res.variant_cols(best),
-            algo_s=algo_s,
+            algo_s=clk.elapsed,
             objective=int(
                 res.per_task_cost[best].astype(np.int64).sum()
             ),
@@ -451,10 +515,12 @@ class WindowedAuctionBackend(AuctionBackend):
         dispatch time — the controller ranks lanes and applies budgets on
         host, which `place_whatif`'s argmin-and-return hides."""
         _key, prog = self._program(state.n_tasks, state.n_jobs)
-        t0 = time.perf_counter()
-        res = prog.what_if(state, list(variants), active_masks=active_masks)
-        algo_s = time.perf_counter() - t0
-        return res, algo_s
+        variants = list(variants)
+        with solver_clock(
+            "solver.auction_windowed.whatif", lanes=len(variants)
+        ) as clk:
+            res = prog.what_if(state, variants, active_masks=active_masks)
+        return res, clk.elapsed
 
 
 class MCMFBackend(SchedulerBackend):
@@ -471,15 +537,15 @@ class MCMFBackend(SchedulerBackend):
 
     def place(self, state: RoundState, ctx: RoundContext) -> Placement:
         costs = dense_costs(state, self.topo, self.params, self.lut)
-        t0 = time.perf_counter()
-        g = flow_network.build_flow_graph(state, self.topo, self.params, costs)
-        fr = mcmf.min_cost_max_flow(
-            g.src, g.dst, g.cap, g.cost, g.source, g.sink, g.n_nodes
-        )
-        cols = flow_network.extract_assignment(g, fr.flow, state)
+        with solver_clock("solver.mcmf") as clk:
+            g = flow_network.build_flow_graph(state, self.topo, self.params, costs)
+            fr = mcmf.min_cost_max_flow(
+                g.src, g.dst, g.cap, g.cost, g.source, g.sink, g.n_nodes
+            )
+            cols = flow_network.extract_assignment(g, fr.flow, state)
         return Placement(
             cols=np.asarray(cols, np.int64),
-            algo_s=time.perf_counter() - t0,
+            algo_s=clk.elapsed,
             objective=int(fr.total_cost),
         )
 

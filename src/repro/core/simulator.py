@@ -51,6 +51,8 @@ import numpy as np
 if TYPE_CHECKING:
     from .metrics_stream import StreamingSimMetrics
 
+from repro import obs
+
 from . import perf_model
 from .engine import EMPTY_IDS, JobTable, TaskTable, drop_positions, take_ready
 from .latency import LatencyPlane
@@ -351,6 +353,15 @@ class Simulator:
             if len(self.pending):
                 self.tt.wait_s[self.pending] += cfg.round_interval_s
 
+        if self.oracle is not None and obs.enabled():
+            # Mirror the device oracle's upload/LRU accounting into the
+            # counter namespace (one shot — the oracle is per-Simulator).
+            for key, val in self.oracle.stats().items():
+                if key in (
+                    "round_uploads", "uploaded_floats",
+                    "decomp_builds", "decomp_hits",
+                ):
+                    obs.add(f"oracle.{key}", float(val))
         return self.metrics
 
     # ------------------------------------------------------------------ #
@@ -454,6 +465,16 @@ class Simulator:
             self.jt.root_machine[jdense[is_root]] = machines[is_root]
 
     def _round(self, t: float, migration_round: bool) -> None:
+        with obs.span("sim.round", t=float(t), migration=bool(migration_round)):
+            self._round_body(t, migration_round)
+            if obs.enabled():
+                # Post-round cluster gauges (Perfetto counter tracks).
+                obs.gauge("sim.queue_depth", float(len(self.pending)))
+                obs.gauge("sim.pending_roots", float(len(self.pending_roots)))
+                obs.gauge("sim.free_slots", float(self.free_slots.sum()))
+                obs.gauge("sim.running_tasks", float(len(self.running)))
+
+    def _round_body(self, t: float, migration_round: bool) -> None:
         cfg = self.cfg
 
         # Roots: immediate placement on any available machine (random).
@@ -461,36 +482,38 @@ class Simulator:
         # draw, exactly like the seed loop (roots are O(jobs), not O(tasks));
         # the running-queue concatenate happens once for the whole round.
         if len(self.pending_roots):
-            tt, jt = self.tt, self.jt
-            kept, placed = [], []
-            for rid in self.pending_roots:
-                free_m = np.nonzero(self.free_slots > 0)[0]
-                if len(free_m) == 0:
-                    tt.wait_s[rid] += cfg.round_interval_s
-                    kept.append(rid)
-                    continue
-                m = int(self.rng.choice(free_m))
-                j = tt.job[rid]
-                when = float(t)  # roots place with zero algorithm time
-                tt.machine[rid] = m
-                tt.placed_s[rid] = when
-                tt.start_s[rid] = when
-                tt.end_s[rid] = when + jt.duration_s[j]
-                jt.root_machine[j] = m
-                self.free_slots[m] -= 1
-                self.task_counts[m] += 1
-                placed.append(rid)
-                self.metrics.tasks_placed += 1
-                self.metrics.placement_latency_s.append(
-                    float(when - tt.submit_s[rid])
+            with obs.span("sim.roots", n=int(len(self.pending_roots))):
+                tt, jt = self.tt, self.jt
+                kept, placed = [], []
+                for rid in self.pending_roots:
+                    free_m = np.nonzero(self.free_slots > 0)[0]
+                    if len(free_m) == 0:
+                        tt.wait_s[rid] += cfg.round_interval_s
+                        kept.append(rid)
+                        continue
+                    m = int(self.rng.choice(free_m))
+                    j = tt.job[rid]
+                    when = float(t)  # roots place with zero algorithm time
+                    tt.machine[rid] = m
+                    tt.placed_s[rid] = when
+                    tt.start_s[rid] = when
+                    tt.end_s[rid] = when + jt.duration_s[j]
+                    jt.root_machine[j] = m
+                    self.free_slots[m] -= 1
+                    self.task_counts[m] += 1
+                    placed.append(rid)
+                    self.metrics.tasks_placed += 1
+                    self.metrics.placement_latency_s.append(
+                        float(when - tt.submit_s[rid])
+                    )
+                if placed:
+                    obs.add("sim.tasks_placed", len(placed))
+                    self.running = np.concatenate(
+                        [self.running, np.asarray(placed, np.int64)]
+                    )
+                self.pending_roots = (
+                    np.asarray(kept, np.int64) if kept else EMPTY_IDS
                 )
-            if placed:
-                self.running = np.concatenate(
-                    [self.running, np.asarray(placed, np.int64)]
-                )
-            self.pending_roots = (
-                np.asarray(kept, np.int64) if kept else EMPTY_IDS
-            )
 
         self._round_solve(t, migration_round)
 
@@ -618,13 +641,17 @@ class Simulator:
             # desynchronise the series from the migration cadence.
             if migration_round and backend.supports_migration:
                 self.metrics.migrated_pct_per_round.append(0.0)
+                obs.gauge("sim.migrated_pct", 0.0)
                 if self.qos is not None:
                     self._record_controller(0.0, len(degraded))
             return
 
-        state = self._build_round_state(
-            ready_ids, mover_ids, t, with_latency=backend.needs_latency
-        )
+        with obs.span(
+            "sim.build_state", tasks=int(len(ready_ids) + len(mover_ids))
+        ):
+            state = self._build_round_state(
+                ready_ids, mover_ids, t, with_latency=backend.needs_latency
+            )
         M = state.n_machines
         ctx = RoundContext(
             rng=self.rng, task_counts=self.task_counts, n_ready=len(ready_ids)
@@ -641,7 +668,7 @@ class Simulator:
             and hasattr(backend, "whatif_result")
         ):
             placement, ctrl_info = self._controller_place(
-                state, ctx, mover_ids, degraded, n_ready=len(ready_ids)
+                state, ctx, mover_ids, degraded, n_ready=len(ready_ids), t=t
             )
         # What-if migration rounds: evaluate K preemption-aggressiveness
         # (beta) variants in one vmapped dispatch and apply the placement
@@ -663,60 +690,70 @@ class Simulator:
         algo_s = self._algo_s(placement.algo_s)
         self.metrics.algo_runtime_s.append(algo_s)
         self.metrics.rounds += 1
+        obs.add("sim.rounds")
 
-        cols = np.asarray(placement.cols, np.int64)
-        n_ready = len(ready_ids)
-        rcols = cols[:n_ready]
-        placed = (rcols >= 0) & (rcols < M)
-        if placed.any():
-            self._start_batch(ready_ids[placed], rcols[placed], t, algo_s)
-            self.pending = drop_positions(self.pending, pos[placed])
-        # Unplaced ready tasks stay pending (unscheduled aggregator).
+        with obs.span("sim.apply"):
+            cols = np.asarray(placement.cols, np.int64)
+            n_ready = len(ready_ids)
+            rcols = cols[:n_ready]
+            placed = (rcols >= 0) & (rcols < M)
+            if placed.any():
+                self._start_batch(ready_ids[placed], rcols[placed], t, algo_s)
+                self.pending = drop_positions(self.pending, pos[placed])
+            # Unplaced ready tasks stay pending (unscheduled aggregator).
 
-        if not backend.supports_migration:
-            # Solver baselines: mover columns are solved but never applied,
-            # and no migration metrics accrue (seed semantics).
-            return
-        n_migrated = 0
-        mig = None
-        if len(mover_ids):
-            mcols = cols[n_ready:]
-            cur = self.tt.machine[mover_ids]
-            mig = (mcols >= 0) & (mcols < M) & (mcols != cur)
-            # col == unscheduled for a running task: keep it running
-            # (eviction-to-idle is never profitable under Eq. 10 costs).
-            n_migrated = int(mig.sum())
-            if n_migrated:
-                # Migration: move without restart.
-                np.add.at(self.free_slots, cur[mig], 1)
-                np.subtract.at(self.task_counts, cur[mig], 1)
-                self.tt.machine[mover_ids[mig]] = mcols[mig]
-                np.subtract.at(self.free_slots, mcols[mig], 1)
-                np.add.at(self.task_counts, mcols[mig], 1)
-                self.metrics.tasks_migrated += n_migrated
-        if migration_round:
-            # Every migration round records a sample — 0.0 when no movers
-            # were eligible — so the series length tracks the cadence.
-            self.metrics.migrated_pct_per_round.append(
-                100.0 * n_migrated / len(mover_ids) if len(mover_ids) else 0.0
-            )
-        if ctrl_info is not None:
-            self._record_controller(
-                ctrl_info["improvement"], ctrl_info["n_degraded"]
-            )
-            if mig is not None and n_migrated:
-                # Hold down re-triggering while the moved jobs' perf
-                # settles at the new placement.
-                moved = np.unique(self.jt.job_id[self.tt.job[mover_ids[mig]]])
-                for j in moved:
-                    self.qos.migrated(int(j), float(t))
+            if not backend.supports_migration:
+                # Solver baselines: mover columns are solved but never
+                # applied, and no migration metrics accrue (seed semantics).
+                return
+            n_migrated = 0
+            mig = None
+            if len(mover_ids):
+                mcols = cols[n_ready:]
+                cur = self.tt.machine[mover_ids]
+                mig = (mcols >= 0) & (mcols < M) & (mcols != cur)
+                # col == unscheduled for a running task: keep it running
+                # (eviction-to-idle is never profitable under Eq. 10 costs).
+                n_migrated = int(mig.sum())
+                if n_migrated:
+                    # Migration: move without restart.
+                    np.add.at(self.free_slots, cur[mig], 1)
+                    np.subtract.at(self.task_counts, cur[mig], 1)
+                    self.tt.machine[mover_ids[mig]] = mcols[mig]
+                    np.subtract.at(self.free_slots, mcols[mig], 1)
+                    np.add.at(self.task_counts, mcols[mig], 1)
+                    self.metrics.tasks_migrated += n_migrated
+                    obs.add("sim.tasks_migrated", n_migrated)
+            if migration_round:
+                # Every migration round records a sample — 0.0 when no
+                # movers were eligible — so the series length tracks the
+                # cadence.
+                pct = (
+                    100.0 * n_migrated / len(mover_ids) if len(mover_ids) else 0.0
+                )
+                self.metrics.migrated_pct_per_round.append(pct)
+                obs.gauge("sim.migrated_pct", pct)
+            if ctrl_info is not None:
+                self._record_controller(
+                    ctrl_info["improvement"], ctrl_info["n_degraded"]
+                )
+                if mig is not None and n_migrated:
+                    # Hold down re-triggering while the moved jobs' perf
+                    # settles at the new placement.
+                    moved = np.unique(
+                        self.jt.job_id[self.tt.job[mover_ids[mig]]]
+                    )
+                    for j in moved:
+                        self.qos.migrated(int(j), float(t))
 
     def _record_controller(self, improvement: float, n_degraded: int) -> None:
         self.metrics.controller_improvement_per_round.append(float(improvement))
         self.metrics.degraded_jobs_per_round.append(float(n_degraded))
         self.metrics.controller_rounds += 1
+        obs.add("controller.rounds")
+        obs.gauge("sim.degraded_jobs", float(n_degraded))
 
-    def _controller_place(self, state, ctx, mover_ids, degraded, n_ready):
+    def _controller_place(self, state, ctx, mover_ids, degraded, n_ready, t=0.0):
         """One controller round: rank re-placement hypotheses, apply the
         budgeted best.
 
@@ -778,6 +815,7 @@ class Simulator:
         cur = state.cur_machine[n_ready:]
         moves = (mcols >= 0) & (mcols < M) & (mcols != cur)
         n_moves = int(moves.sum())
+        n_proposed, n_reverts = n_moves, 0
         if n_moves:
             # Post-application slot balance: placed columns debit, movers
             # staying put (unplaced columns) re-occupy their current slot.
@@ -812,6 +850,33 @@ class Simulator:
                     free_after[mcols[off]] += 1
                     cols[n_ready + off] = -1
                     n_moves -= 1
+                    n_reverts += 1
+        if obs.enabled():
+            # Structured audit record: the controller's full decision for
+            # this round (exported as JSONL by obs.export.save_audit_jsonl).
+            obs.add("controller.reverts", n_reverts)
+            obs.audit_event(
+                "controller_round",
+                t=float(t),
+                degraded_jobs={int(k): float(v) for k, v in degraded.items()},
+                lanes=[
+                    {
+                        "lane": k,
+                        "frozen_baseline": k == 0,
+                        "beta_scale": float(variants[k].beta_scale),
+                        "active_movers": int(masks[k][n_ready:].sum()),
+                        "true_cost": int(outcomes[k]),
+                    }
+                    for k in range(len(variants))
+                ],
+                chosen_lane=best,
+                improvement=float(improvement),
+                budget=int(cfg.migration_budget),
+                n_moves_proposed=n_proposed,
+                n_reverts=n_reverts,
+                n_moves_applied=n_moves,
+                algo_s=float(algo_s),
+            )
         from .scheduler_backend import Placement
 
         placement = Placement(
@@ -825,6 +890,10 @@ class Simulator:
     # ------------------------------------------------------------------ #
 
     def _sample_perf(self, t: float) -> None:
+        with obs.span("sim.perf_sample", t=float(t)):
+            self._sample_perf_body(t)
+
+    def _sample_perf_body(self, t: float) -> None:
         tt, jt = self.tt, self.jt
         n = tt.n
         if not n:

@@ -42,6 +42,8 @@ import multiprocessing
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+from repro import obs
+
 from .latency import LatencyPlane
 from .scenarios import Scenario, get_scenario
 from .simulator import SimConfig, Simulator
@@ -107,6 +109,16 @@ class SweepCell:
     policy: str
     summary: Dict[str, float]
     wall_s: float
+    # Per-cell telemetry counter deltas (repro.obs), captured when
+    # telemetry is enabled in the executing process; None otherwise (and
+    # in pre-telemetry saved sweeps). Only *deterministic* counters are
+    # recorded (``jit.*`` warm-up accounting is excluded), so the cell's
+    # telemetry is identical whether the cell ran in a full single-host
+    # sweep, a worker pool, or an (i, n) shard — merge-safe exactly like
+    # the summaries. NOTE: spawn-pool workers re-read ``REPRO_OBS`` from
+    # the environment; a programmatic ``obs.set_enabled(True)`` in the
+    # parent does not reach ``workers > 1`` cells.
+    telemetry: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass
@@ -237,14 +249,21 @@ def _run_cell(args: Tuple[SweepSpec, str, int, str]) -> SweepCell:
         fixed_algo_s=spec.fixed_algo_s,
         **scenario.sim_config_kwargs(topo, spec.duration_s, seed),
     )
+    counters_before = obs.counters() if obs.enabled() else None
     t0 = time.perf_counter()
-    metrics = Simulator(wl, plane, cfg).run()
+    with obs.span("sweep.cell", scenario=scenario_name, seed=seed, policy=policy):
+        metrics = Simulator(wl, plane, cfg).run()
     return SweepCell(
         scenario=scenario_name,
         seed=seed,
         policy=policy,
         summary=metrics.summary(),
         wall_s=time.perf_counter() - t0,
+        telemetry=(
+            obs.counters_since(counters_before)
+            if counters_before is not None
+            else None
+        ),
     )
 
 

@@ -41,6 +41,8 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
+
 from .perf_model import APP_MODEL_INDEX
 from .topology import Topology
 from .workload import (
@@ -220,12 +222,14 @@ class SyntheticTraceCursor:
         for w in range(self.n_windows):
             lo = w * self.window_s
             hi = min(lo + self.window_s, self.duration_s)
-            jobs = self._window_jobs(w)
-            if w == 0:
-                jobs = self._standing_jobs() + jobs
-            for job in jobs:
-                job.job_id = next_id
-                next_id += 1
+            with obs.span("trace.window", window=w, t_lo=lo, t_hi=hi):
+                jobs = self._window_jobs(w)
+                if w == 0:
+                    jobs = self._standing_jobs() + jobs
+                for job in jobs:
+                    job.job_id = next_id
+                    next_id += 1
+                obs.add("trace.jobs_streamed", len(jobs))
             yield lo, hi, jobs
 
     @property
@@ -374,13 +378,15 @@ class CsvTraceCursor:
 
     def _read(self) -> List[Job]:
         if self._jobs_cache is None:
-            self._jobs_cache = read_task_events(
-                self.paths,
-                trace_duration_s=self.duration_s,
-                min_tasks=self.min_tasks,
-                mix=self.mix,
-                seed=self.seed,
-            )
+            with obs.span("trace.csv_read", n_files=len(self.paths)):
+                self._jobs_cache = read_task_events(
+                    self.paths,
+                    trace_duration_s=self.duration_s,
+                    min_tasks=self.min_tasks,
+                    mix=self.mix,
+                    seed=self.seed,
+                )
+            obs.add("trace.jobs_streamed", len(self._jobs_cache))
         return self._jobs_cache
 
     @property

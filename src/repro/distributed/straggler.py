@@ -18,6 +18,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class StragglerDetector:
@@ -91,6 +93,11 @@ class QoSTracker:
             n = self._below.get(job_id, 0) + 1
             self._below[job_id] = n
             if n >= self.window:
+                if job_id not in self._degraded:
+                    # A job *entering* the degraded set is one QoS trigger
+                    # (refreshing the sample of an already-degraded job
+                    # is not).
+                    obs.add("qos.triggers")
                 self._degraded[job_id] = perf
         elif perf >= self.threshold + self.clear_margin:
             self._below.pop(job_id, None)

@@ -1,0 +1,68 @@
+"""`repro.obs` — zero-cost-when-disabled scheduler telemetry (ISSUE 8).
+
+Public surface (all no-ops while disabled; enable with ``REPRO_OBS=1`` or
+`set_enabled(True)`):
+
+    from repro import obs
+
+    with obs.span("sim.round", t=t):          # nested wall-clock slices
+        ...
+    obs.add("auction.iterations", iters)      # accumulating counters
+    obs.gauge("sim.queue_depth", depth)       # timestamped gauge tracks
+    obs.audit_event("controller_round", ...)  # structured audit records
+
+    obs.export.save_chrome_trace("trace.json")        # open in Perfetto
+    obs.export.save_audit_jsonl("audit.jsonl")
+    obs.export.summarize()                            # benchmark sections
+
+See `repro.obs.spans` for the registry semantics (thread-local nesting,
+bounded buffers, the jit-compile listener, deterministic snapshots) and
+`repro.obs.export` for the Chrome trace-event mapping and validator.
+docs/observability.md walks through exporting and reading a replay trace.
+"""
+
+from . import export  # noqa: F401
+from .spans import (  # noqa: F401
+    MAX_AUDIT_EVENTS,
+    MAX_SPANS,
+    MAX_TRACK_SAMPLES,
+    NONDETERMINISTIC_PREFIXES,
+    SpanRecord,
+    Telemetry,
+    add,
+    audit_event,
+    counters,
+    counters_since,
+    deterministic_counters,
+    enabled,
+    gauge,
+    get,
+    record_span,
+    reset,
+    scope,
+    set_enabled,
+    span,
+)
+
+__all__ = [
+    "Telemetry",
+    "SpanRecord",
+    "enabled",
+    "set_enabled",
+    "get",
+    "reset",
+    "span",
+    "record_span",
+    "add",
+    "gauge",
+    "audit_event",
+    "counters",
+    "counters_since",
+    "deterministic_counters",
+    "scope",
+    "export",
+    "NONDETERMINISTIC_PREFIXES",
+    "MAX_SPANS",
+    "MAX_TRACK_SAMPLES",
+    "MAX_AUDIT_EVENTS",
+]
