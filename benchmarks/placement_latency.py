@@ -1,4 +1,13 @@
-"""Paper Fig. 8: task placement latency (submission -> placement)."""
+"""Paper Fig. 8: task placement latency (submission -> placement).
+
+This is the *simulated* metric: latency in simulated seconds, driven by
+the closed trace replay's round cadence and each policy's admission
+behaviour — it answers the paper's question (how long do tasks queue
+under each policy?). For the scheduler's own *wall-clock* cost per
+decision — the service-side latency of running the placement loop online
+under an open-loop arrival stream — see `benchmarks/serving_latency.py`
+and `core.serving`; the two measure different clocks on purpose.
+"""
 
 from __future__ import annotations
 

@@ -6,7 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Figures covered:
   Fig. 6  algo_runtime       - solver runtime per round
   Fig. 7  migrations         - migrated-task percentage (preemption)
   (extra) migration_quality  - controller vs no-migration on dynamic planes
-  Fig. 8  placement_latency  - submission -> placement latency
+  Fig. 8  placement_latency  - submission -> placement latency (simulated)
+  (extra) serving_latency    - wall-clock per-decision latency + saturation
   Fig. 9  response_time      - submission -> completion
   (extra) sweep_bench        - SoA engine speedup + multi-scenario sweep
   (extra) round_pipeline     - host-numpy vs fused on-device round
@@ -40,6 +41,7 @@ def main() -> None:
         placement_quality,
         response_time,
         round_pipeline,
+        serving_latency,
         sweep_bench,
         trace_scale,
     )
@@ -51,6 +53,7 @@ def main() -> None:
         ("migrations", migrations),
         ("migration_quality", migration_quality),
         ("placement_latency", placement_latency),
+        ("serving_latency", serving_latency),
         ("response_time", response_time),
         ("sweep_bench", sweep_bench),
         ("round_pipeline", round_pipeline),

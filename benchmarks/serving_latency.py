@@ -1,0 +1,174 @@
+"""Online serving gate: wall-clock decision latency + saturation knee.
+
+Runs `core.serving.ScheduleService` — the scheduler as a long-running
+service under an open-loop Poisson arrival stream — across an arrival-
+rate ladder for ``auction_windowed`` (device path, pinned buckets, warm
+re-entry, incremental `DeviceLatencyOracle` plane updates) and the
+``random`` host baseline, and reports:
+
+- per-decision placement latency p50/p99 (wall clock: arrival tick ->
+  placement visible), from the lowest — most stable — rung;
+- the max sustainable arrival rate (largest rate whose queue drained
+  without hitting the blow-up limit; deterministic: simulated dynamics
+  run under ``fixed_algo_s=0``, so only the wall-clock *measurements*
+  vary run to run);
+- the warm-path contract: zero post-warmup ``jit.backend_compiles``
+  across the whole windowed ladder (one shared pinned backend), asserted
+  hard, and bit-identical placements between recorded serving rounds and
+  fresh per-round batch solves (``replay_mismatches == 0``, asserted).
+
+NOTE this measures the scheduler as a *service* (wall clock per
+decision); `benchmarks/placement_latency.py` measures the paper's
+simulated Fig. 8 metric (submission -> placement in simulated seconds).
+
+Results land in benchmarks/results/serving_latency.json (committed at
+``small`` scale; larger REPRO_BENCH_SCALE values write alongside).
+``--pins-only`` runs a seconds-long smoke config and only the two hard
+asserts — the CI hook.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+
+from repro import obs
+from repro.core.scenarios import get_serving_preset
+from repro.core.serving import ScheduleService, ServingConfig, saturation_sweep
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "small")
+
+RESULTS_PATH = os.path.join(
+    os.path.dirname(__file__),
+    "results",
+    "serving_latency.json" if SCALE == "small" else f"serving_latency_{SCALE}.json",
+)
+
+# scale -> (n_machines, machines/rack, racks/pod, horizon_s, rate ladder).
+# Capacity at duration_scale=0.1: lambda_max ~ slots / (5.5 tasks * ~30 s),
+# so each ladder straddles its cluster's knee.
+_SCALES = {
+    "small": (64, 8, 4, 90, (0.5, 1.0, 2.0, 4.0)),
+    "medium": (128, 16, 4, 180, (1.0, 2.0, 4.0, 8.0)),
+    "paper": (256, 16, 8, 420, (2.0, 4.0, 8.0, 16.0)),
+}
+
+RECORD_ROUNDS = 6
+
+
+def _base_config(n_machines, per_rack, racks_per_pod, horizon) -> ServingConfig:
+    return ServingConfig(
+        n_machines=n_machines,
+        machines_per_rack=per_rack,
+        racks_per_pod=racks_per_pod,
+        slots_per_machine=4,
+        horizon_s=horizon,
+        duration_scale=0.1,
+        batch_tasks=128,
+        # Low enough that an over-capacity rung visibly blows up within
+        # the horizon instead of limping through the drain window.
+        queue_limit_tasks=512,
+    )
+
+
+def _sweep(cfg: ServingConfig, backend: str):
+    cfg = dataclasses.replace(
+        cfg,
+        backend=backend,
+        device_latency=(backend == "auction_windowed"),
+        record_rounds=(RECORD_ROUNDS if backend.startswith("auction") else 0),
+    )
+    n, mpr, rpp, horizon, rates = _SCALES[SCALE]
+    return saturation_sweep(cfg, rates, share_backend=True)
+
+
+def _assert_warm_contract(reports) -> None:
+    for r in reports:
+        assert r.jit_compiles_post_warmup == 0.0, (
+            f"serving warm path recompiled at rate {r.rate_jobs_s}: "
+            f"{r.jit_compiles_post_warmup} post-warmup jit cache misses"
+        )
+        assert r.replay_mismatches <= 0, (
+            f"serving rounds at rate {r.rate_jobs_s} diverged from the "
+            f"batch replay in {r.replay_mismatches} recorded round(s)"
+        )
+
+
+def run():
+    n, mpr, rpp, horizon, rates = _SCALES[SCALE]
+    base = _base_config(n, mpr, rpp, horizon)
+
+    results = {}
+    rows = []
+    # Telemetry on for the whole module: the zero-recompile gate IS the
+    # jit counter, and the serving gauges/spans ride along for free.
+    with obs.scope():
+        for backend in ("auction_windowed", "random"):
+            reports, sustainable = _sweep(base, backend)
+            if backend == "auction_windowed":
+                _assert_warm_contract(reports)
+            lowest = reports[0]  # most stable sub-saturation rung
+            results[backend] = {
+                "decision_p50_ms": round(lowest.decision_p50_ms, 4),
+                "decision_p99_ms": round(lowest.decision_p99_ms, 4),
+                "sustainable_rate_jobs_s": sustainable,
+                "jit_compiles_post_warmup": max(
+                    r.jit_compiles_post_warmup for r in reports
+                ),
+                "replay_mismatch_rounds": max(
+                    r.replay_mismatches for r in reports
+                ),
+                "rates": [r.to_jsonable() for r in reports],
+            }
+            rows.append(
+                (
+                    f"serving_decision_p50_{backend}",
+                    lowest.decision_p50_ms * 1e3,
+                    f"p99_ms={lowest.decision_p99_ms:.2f};"
+                    f"sustainable={sustainable:g}jobs_s",
+                )
+            )
+
+    payload = {
+        "scale": SCALE,
+        "n_machines": n,
+        "horizon_s": horizon,
+        "rates": list(rates),
+        "backends": results,
+    }
+    os.makedirs(os.path.dirname(RESULTS_PATH), exist_ok=True)
+    with open(RESULTS_PATH, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    rows.append(("serving_latency_results_json", 0.0, os.path.relpath(RESULTS_PATH)))
+    return rows
+
+
+def pins_only() -> None:
+    """CI hook: seconds-long smoke run, hard asserts only, no JSON."""
+    cfg = ServingConfig(**{
+        **get_serving_preset("smoke").config_kwargs,
+        "backend": "auction_windowed",
+        "device_latency": True,
+        "record_rounds": RECORD_ROUNDS,
+        "warmup_rounds": 3,
+    })
+    with obs.scope():
+        report = ScheduleService(cfg).run()
+    _assert_warm_contract([report])
+    assert report.drained, "smoke serving run failed to drain"
+    print(
+        f"serving pins ok: {report.tasks_placed} tasks, "
+        f"p50={report.decision_p50_ms:.2f}ms, 0 post-warmup compiles, "
+        f"0 replay mismatches"
+    )
+
+
+if __name__ == "__main__":
+    if "--pins-only" in sys.argv:
+        pins_only()
+    else:
+        for row in run():
+            print(row)

@@ -79,6 +79,9 @@ class DeviceLatencyOracle:
         self.decomp_hits = 0  # LRU cache hits (no host->device upload)
         self.decomp_floats = 0
         self.rows_served = 0  # (root, M) rows produced on device
+        # Serving mode pins the padded job bucket so `root_rows` keeps one
+        # kernel shape across ticks with varying live-job counts (0 = off).
+        self._pin_jobs = 0
 
     # ------------------------------------------------------------------ #
 
@@ -118,14 +121,30 @@ class DeviceLatencyOracle:
 
     # ------------------------------------------------------------------ #
 
+    def pin_jobs(self, n_jobs: int) -> None:
+        """Pin the padded job bucket of every later ``root_rows`` call.
+
+        With a pin in place, ``root_rows`` pads to (at least) the pinned
+        bucket and returns the **unsliced** ``(jp, M)`` block: the eager
+        ``rows[:n_jobs]`` slice would otherwise compile a fresh tiny XLA
+        program per distinct live-job count, which a serving loop's
+        zero-recompile gate cannot tolerate. Padding rows repeat root 0 and
+        are inert — ``stack_round_states`` accepts rows beyond ``n_jobs``
+        and no task ever indexes them (``task_job < n_jobs``).
+        """
+        self._pin_jobs = auction._bucket(max(int(n_jobs), 1), lo=8)
+
     def root_rows(self, machines: Sequence[int], t) -> jax.Array:
         """(J, M) float32 RTT rows, bit-identical to
-        ``plane.latency_rows(machines, t)`` (as a device array)."""
+        ``plane.latency_rows(machines, t)`` (as a device array).
+
+        When :meth:`pin_jobs` is active the result is the full padded
+        ``(jp, M)`` block instead (rows past ``n_jobs`` are padding)."""
         roots = np.asarray(machines, np.int64).reshape(-1)
         n_jobs = roots.shape[0]
         epoch = self.plane.regime_epoch(t)
         series_t, mult_dev = self._second_arrays(t)
-        jp = auction._bucket(n_jobs, lo=8)
+        jp = max(auction._bucket(n_jobs, lo=8), self._pin_jobs)
         padded = np.empty(jp, np.int64)
         padded[:n_jobs] = roots
         padded[n_jobs:] = roots[0] if n_jobs else 0
@@ -138,6 +157,8 @@ class DeviceLatencyOracle:
         rows = _rows_kernel(sel, coeff, roots_dev, series_t, mult_dev, self._rack_of)
         # Stays a jax.Array: `stack_round_states` scatters device rows with
         # a device-side .at[].set, so the (J, M) block never lands on host.
+        if self._pin_jobs:
+            return rows  # fixed (jp, M): no per-n_jobs slice program
         return rows[:n_jobs]
 
     def stats(self) -> dict:

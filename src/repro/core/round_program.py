@@ -239,20 +239,28 @@ def stack_round_states(
     # a numpy setitem would silently sync+download them, so scatter into a
     # device buffer instead (after shape validation below) and hand
     # `_window_arrays` the jax array as-is.
+    #
+    # Latency rows may carry MORE rows than the round has jobs (a pinned
+    # oracle pads its output to a fixed job bucket so its device programs
+    # compile once — see `latency_device.DeviceLatencyOracle.pin_jobs`);
+    # the scatter copies whatever is there, up to the window bucket. Rows
+    # past the round's real jobs are never indexed by a real task
+    # (task_job < n_jobs), so they are as inert as zero padding.
     device_latency = isinstance(states[0].root_latency, jax.Array)
     for r, s in enumerate(states):
         T, J = s.n_tasks, s.n_jobs
-        if T > Tp or J > Jp:
+        if T > Tp or J > Jp or s.root_latency.shape[0] > Jp:
             raise ValueError(
-                f"round {r} ({T} tasks, {J} jobs) exceeds the window bucket "
-                f"({Tp}, {Jp})"
+                f"round {r} ({T} tasks, {J} jobs, "
+                f"{s.root_latency.shape[0]} latency rows) exceeds the "
+                f"window bucket ({Tp}, {Jp})"
             )
         if s.n_machines != M:
             raise ValueError("all rounds in a window must share the cluster")
         out.task_job[r, :T] = s.task_job
         out.perf_idx[r, :T] = s.perf_idx
         if not device_latency:
-            out.root_latency[r, :J] = s.root_latency
+            out.root_latency[r, : s.root_latency.shape[0]] = s.root_latency
         out.wait_s[r, :T] = s.wait_s
         out.run_s[r, :T] = s.run_s
         out.cur_machine[r, :T] = s.cur_machine
@@ -262,7 +270,7 @@ def stack_round_states(
     if device_latency:
         rl = jnp.zeros((R, Jp, M), jnp.float32)
         for r, s in enumerate(states):
-            rl = rl.at[r, : s.n_jobs].set(s.root_latency)
+            rl = rl.at[r, : s.root_latency.shape[0]].set(s.root_latency)
         out.root_latency = rl
     return out
 
@@ -328,6 +336,51 @@ class RoundProgram:
             prices=jnp.zeros((self.n_machines, self.n_slots), jnp.float32),
             assigned=jnp.full((self.n_pad_tasks,), -1, jnp.int32),
         )
+
+    def warmup(self, free_slots: np.ndarray, root_latency=None) -> None:
+        """Compile + execute the R=1 advance path on a synthetic round.
+
+        A serving loop wants its *first real decision* to be a warm
+        dispatch, so this runs one throwaway window — a single task of job
+        0 rooted on machine 0 with zero latency everywhere — through the
+        full program: every jitted piece (the scan body, the window-array
+        uploads, `init_state`'s buffer builds) compiles here, at the
+        bucket shapes all later rounds share. The warmup carry is
+        discarded; under exogenous slot accounting (``chain_slots=False``,
+        the serving mode) a round's ``free_slots`` comes from its window
+        row, so nothing the warmup computed can leak into real results.
+        Works against a full cluster too: an unplaceable task lands on its
+        unscheduled aggregator column, which still counts as assigned.
+
+        ``root_latency`` optionally substitutes the latency rows — pass a
+        device array (e.g. a pinned `DeviceLatencyOracle.root_rows`
+        output) to also compile `stack_round_states`'s device-scatter
+        branch at the exact row shape real rounds will carry; otherwise a
+        host (1, M) zero block exercises the numpy branch only.
+        """
+        M = self.n_machines
+        state = RoundState(
+            task_job=np.zeros(1, np.int64),
+            perf_idx=np.zeros(1, np.int64),
+            root_machine=np.zeros(1, np.int64),
+            root_latency=(
+                np.zeros((1, M), np.float32)
+                if root_latency is None
+                else root_latency
+            ),
+            wait_s=np.zeros(1, np.float32),
+            run_s=np.zeros(1, np.float32),
+            cur_machine=np.full(1, -1, np.int64),
+            free_slots=np.asarray(free_slots, np.int32),
+        )
+        window = stack_round_states(
+            [state],
+            n_pad_tasks=self.n_pad_tasks,
+            n_pad_jobs=self.n_pad_jobs,
+            exact=self.exact,
+        )
+        with obs.span("round_program.warmup", bucket_tasks=self.n_pad_tasks):
+            self.advance(self.init_state(state.free_slots), window)
 
     def _round_body(
         self, free_slots, inputs, *, p_m, p_r, omega, gamma, preemption,

@@ -272,3 +272,67 @@ def get_scenario(name: str) -> Scenario:
         raise KeyError(
             f"unknown scenario {name!r}; available: {sorted(SCENARIOS)}"
         ) from None
+
+
+# --------------------------------------------------------------------- #
+# Serving presets (core.serving) — kept apart from SCENARIOS: sweep cells
+# replay a fixed workload, serving runs meter an open-loop arrival stream.
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPreset:
+    """Named `serving.ServingConfig` kwargs bundle."""
+
+    name: str
+    description: str
+    config_kwargs: Mapping = dataclasses.field(default_factory=dict)
+
+
+SERVING_PRESETS: Dict[str, ServingPreset] = {
+    p.name: p
+    for p in (
+        ServingPreset(
+            name="smoke",
+            description="tiny cluster, seconds-long run (CI pin checks)",
+            config_kwargs={
+                "n_machines": 32,
+                "machines_per_rack": 8,
+                "racks_per_pod": 2,
+                "horizon_s": 30,
+                "rate_jobs_s": 0.5,
+                "batch_tasks": 64,
+                "max_drain_s": 120,
+            },
+        ),
+        ServingPreset(
+            name="steady",
+            description="64-machine cluster at a comfortably sub-saturation "
+            "rate (per-decision latency measurement)",
+            config_kwargs={
+                "n_machines": 64,
+                "horizon_s": 120,
+                "rate_jobs_s": 1.0,
+            },
+        ),
+        ServingPreset(
+            name="saturation",
+            description="base config for arrival-rate ladders "
+            "(serving.saturation_sweep picks the rates)",
+            config_kwargs={
+                "n_machines": 64,
+                "horizon_s": 90,
+                "queue_limit_tasks": 768,
+            },
+        ),
+    )
+}
+
+
+def get_serving_preset(name: str) -> ServingPreset:
+    try:
+        return SERVING_PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown serving preset {name!r}; available: "
+            f"{sorted(SERVING_PRESETS)}"
+        ) from None

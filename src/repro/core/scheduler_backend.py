@@ -1,10 +1,28 @@
 """Pluggable per-round placement engines behind one `SchedulerBackend` API.
 
 The simulator's round used to branch on (policy string x solver string)
-across three code paths; every strategy is now a backend with one entry
-point:
+across three code paths; every strategy is now a backend with one
+*required* entry point:
 
     backend.place(state: RoundState, ctx: RoundContext) -> Placement
+
+plus three *optional* axes, declared by capability flags instead of
+``hasattr`` probing (the flags are the documented protocol; `simulator.py`
+and `core.serving.ScheduleService` branch on them exclusively):
+
+- ``supports_window``  -> `place_window(states, ctx, chain=...)` — R staged
+  rounds in one fused dispatch;
+- ``supports_whatif``  -> `place_whatif(...)` / `whatif_result(...)` — K
+  parameter/mover-mask variants of one round, vmapped;
+- ``supports_serving`` -> `pin_serving(...)` / `warm_serving(...)` — the
+  backend can run a long-lived serving loop with ZERO post-warmup jit
+  recompiles: either it compiles nothing (host paths), or its compiled
+  shapes can be pinned up front to a fixed bucket that every subsequent
+  round fits inside.
+
+Calling an optional entry point on a backend whose flag is False raises
+`BackendCapabilityError` (a `NotImplementedError`) — loudly, instead of an
+``AttributeError`` from a missing duck-typed method.
 
 `Placement.cols` assigns every round task a column — a machine id in
 [0, M), >= M for "stay unscheduled", or -1 for "no decision" — and
@@ -130,8 +148,19 @@ class Placement:
     objective: Optional[int] = None  # solver objective (cost-model backends)
 
 
+class BackendCapabilityError(NotImplementedError):
+    """An optional `SchedulerBackend` entry point was invoked on a backend
+    whose capability flag (``supports_window`` / ``supports_whatif`` /
+    ``supports_serving``) is False."""
+
+
 class SchedulerBackend:
-    """Strategy interface for one scheduling round."""
+    """Strategy interface for one scheduling round.
+
+    Required: `place`. Optional axes are declared by the ``supports_*``
+    capability flags below and default to raising `BackendCapabilityError`
+    — callers branch on the flags, never on ``hasattr``.
+    """
 
     name: str = "abstract"
     #: Whether RoundState.root_latency must be populated (cost-model paths).
@@ -148,15 +177,75 @@ class SchedulerBackend:
     #: changes the solve and, for random costs, the rng stream — seed
     #: semantics) even though their mover columns are never applied.
     selects_movers: bool = False
+    #: Whether `place_window` exists: R staged rounds in one fused dispatch.
+    supports_window: bool = False
+    #: Whether `place_whatif` / `whatif_result` exist: K parameter (and
+    #: mover-mask) variants of one round in one vmapped dispatch.
+    supports_whatif: bool = False
+    #: Whether the backend can run a long-lived serving loop with zero
+    #: post-warmup jit recompiles (`pin_serving` / `warm_serving`). True
+    #: for pure-host backends (nothing compiles) and for device backends
+    #: whose compiled shapes can be pinned to a fixed bucket; False for
+    #: the per-round ``auction`` device path, whose bucket tracks the live
+    #: task count and therefore recompiles as the arrival batch varies.
+    supports_serving: bool = False
 
     def place(self, state: RoundState, ctx: RoundContext) -> Placement:
         raise NotImplementedError
+
+    # ------------------------- optional axes ------------------------- #
+
+    def place_window(
+        self, states, ctx: Optional[RoundContext] = None, *, chain: bool = False
+    ):
+        raise BackendCapabilityError(
+            f"backend {self.name!r} has no window axis (supports_window=False)"
+        )
+
+    def place_whatif(
+        self, state: RoundState, ctx: RoundContext, variants
+    ) -> Placement:
+        raise BackendCapabilityError(
+            f"backend {self.name!r} has no what-if axis (supports_whatif=False)"
+        )
+
+    def whatif_result(
+        self, state: RoundState, ctx: RoundContext, variants, active_masks=None
+    ):
+        raise BackendCapabilityError(
+            f"backend {self.name!r} has no what-if axis (supports_whatif=False)"
+        )
+
+    def pin_serving(self, n_tasks: int, n_jobs: int) -> None:
+        """Fix the compiled shapes a serving loop will run under.
+
+        After pinning, every round whose (task, job) counts fit inside the
+        pinned power-of-two buckets reuses the same compiled programs —
+        the zero-post-warmup-recompile contract `core.serving` measures
+        with the ``jit.backend_compiles`` counter. Host backends compile
+        nothing; their pin is a no-op.
+        """
+        if not self.supports_serving:
+            raise BackendCapabilityError(
+                f"backend {self.name!r} cannot serve (supports_serving=False)"
+            )
+
+    def warm_serving(self, free_slots: np.ndarray, root_latency=None) -> None:
+        """Compile + execute the pinned serving path once, ahead of the
+        loop (results-harmless). ``root_latency`` optionally carries a
+        device latency-row block so the device stacking path warms too.
+        No-op on host backends."""
+        if not self.supports_serving:
+            raise BackendCapabilityError(
+                f"backend {self.name!r} cannot serve (supports_serving=False)"
+            )
 
 
 class RandomBackend(SchedulerBackend):
     name = "random"
     needs_latency = False
     caps_admission = False
+    supports_serving = True  # pure host: nothing compiles
 
     def place(self, state: RoundState, ctx: RoundContext) -> Placement:
         with solver_clock("solver.random") as clk:
@@ -168,6 +257,7 @@ class LoadSpreadingBackend(SchedulerBackend):
     name = "load_spreading"
     needs_latency = False
     caps_admission = False
+    supports_serving = True  # pure host: nothing compiles
 
     def place(self, state: RoundState, ctx: RoundContext) -> Placement:
         with solver_clock("solver.load_spreading") as clk:
@@ -184,6 +274,7 @@ class _SolverBaselineBackend(SchedulerBackend):
 
     needs_latency = False
     selects_movers = True  # movers enter the solve; columns never applied
+    supports_serving = True  # host auction reference: nothing compiles
 
     def __init__(self, params: PolicyParams, topo: Topology):
         self.params = params
@@ -274,6 +365,10 @@ class AuctionBackend(SchedulerBackend):
         self.use_pallas = use_pallas
         self.interpret = interpret
         self.name = "auction" if device else "auction_host"
+        # The host path compiles nothing; the fused device path compiles
+        # one pipeline per (task, job) bucket and cannot pin the bucket —
+        # the windowed subclass is the device serving path.
+        self.supports_serving = not device
 
     def place(self, state: RoundState, ctx: RoundContext) -> Placement:
         if not self.device:
@@ -368,20 +463,58 @@ class WindowedAuctionBackend(AuctionBackend):
       variants of one round in one dispatch, returning the placement of
       the variant with the lowest *true* (undiscounted) cost — the
       migration controller's "pick a better placement" primitive (§7).
+
+    Serving (``supports_serving``): `pin_serving` fixes a bucket floor so
+    every round of a long-lived loop re-enters one compiled program and
+    its donated device carry regardless of the live-task count, and
+    `warm_serving` pre-compiles it — together the zero-post-warmup-
+    recompile contract behind `core.serving.ScheduleService`.
     """
+
+    supports_window = True
+    supports_whatif = True
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
         if not self.device:
             raise ValueError("WindowedAuctionBackend is device-only")
         self.name = "auction_windowed"
+        self.supports_serving = True  # buckets pin via pin_serving
         self._programs: dict = {}  # (Tp, Jp, chain) -> RoundProgram
         self._states: dict = {}  # (Tp, Jp, chain) -> DeviceRoundState
+        self._pin = (0, 0)  # serving bucket floor (Tp, Jp); (0, 0) = unpinned
+
+    def pin_serving(self, n_tasks: int, n_jobs: int) -> None:
+        """Pin the (task, job) bucket floor for long-lived serving.
+
+        Every subsequent `_program` lookup rounds up to at least this
+        bucket, so rounds with any live-task count <= the pin re-enter the
+        SAME compiled program and donated carry (warm re-entry). Rounds
+        that exceed the pin still work — they fall onto a larger bucket,
+        at the cost of one compile (which the serving loop's jit-counter
+        pin would then surface).
+        """
+        self._pin = (
+            auction._bucket(max(int(n_tasks), 1)),
+            auction._bucket(max(int(n_jobs), 1), 8),
+        )
+
+    def warm_serving(self, free_slots: np.ndarray, root_latency=None) -> None:
+        """Compile + run the pinned R=1 window program on a synthetic
+        round (see `RoundProgram.warmup`) so the serving loop's first real
+        decision is a warm dispatch. Results-harmless: the warmup carry is
+        discarded, and exogenous windows never read carried occupancy."""
+        _key, prog = self._program(max(self._pin[0], 1), max(self._pin[1], 1))
+        prog.warmup(np.asarray(free_slots), root_latency=root_latency)
 
     def _program(self, n_tasks: int, n_jobs: int, *, chain: bool = False):
         from .round_program import RoundProgram
 
-        key = (auction._bucket(n_tasks), auction._bucket(n_jobs, 8), chain)
+        key = (
+            max(auction._bucket(n_tasks), self._pin[0]),
+            max(auction._bucket(n_jobs, 8), self._pin[1]),
+            chain,
+        )
         prog = self._programs.get(key)
         if prog is None:
             prog = self._programs[key] = RoundProgram(
@@ -529,6 +662,7 @@ class MCMFBackend(SchedulerBackend):
     name = "mcmf"
     supports_migration = True
     selects_movers = True
+    supports_serving = True  # pure host: nothing compiles
 
     def __init__(self, params: PolicyParams, topo: Topology, lut_table=None):
         self.params = params

@@ -100,6 +100,38 @@ class JobRec:
         return [t for t in self.tasks if t.machine >= 0]
 
 
+@dataclasses.dataclass(frozen=True)
+class MigrationConfig:
+    """Grouped view of SimConfig's migration/controller knobs.
+
+    Construct `SimConfig(migration=MigrationConfig(...))` or keep the
+    flat kwargs (``migration_interval_s=...``) — both spellings populate
+    the same flat fields; the grouped object wins where both are given.
+    Read back via `SimConfig.migration_cfg`.
+    """
+
+    interval_s: int = 10
+    straggler_threshold: Optional[float] = None
+    whatif_betas: tuple = ()
+    controller: bool = False
+    qos_threshold: float = 0.9
+    qos_window: int = 2
+    qos_clear_margin: float = 0.02
+    qos_hold_s: float = 45.0
+    budget: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsConfig:
+    """Grouped view of SimConfig's metrics/measurement knobs (see
+    `MigrationConfig` for the construction contract)."""
+
+    streaming: bool = False
+    perf_reservoir_k: int = 0
+    perf_sample_interval_s: int = 15
+    fixed_algo_s: Optional[float] = None
+
+
 @dataclasses.dataclass
 class SimConfig:
     policy: PolicyName = "nomora"
@@ -159,6 +191,59 @@ class SimConfig:
     qos_clear_margin: float = 0.02  # hysteresis band above the threshold
     qos_hold_s: float = 45.0  # post-migration re-trigger hold-down
     migration_budget: int = 256  # max migrations per controller round
+    # Grouped construction (InitVar: consumed by __post_init__, never a
+    # field — `dataclasses.replace(cfg, ...)` keeps working on the flats).
+    migration: dataclasses.InitVar[Optional[MigrationConfig]] = None
+    metrics: dataclasses.InitVar[Optional[MetricsConfig]] = None
+
+    def __post_init__(
+        self,
+        migration: Optional[MigrationConfig],
+        metrics: Optional[MetricsConfig],
+    ) -> None:
+        # Grouped sub-configs overwrite the corresponding flat fields
+        # wholesale (mixing grouped + flat spellings of the SAME knob is
+        # ambiguous; the grouped object wins).
+        if migration is not None:
+            self.migration_interval_s = migration.interval_s
+            self.straggler_threshold = migration.straggler_threshold
+            self.whatif_betas = migration.whatif_betas
+            self.migration_controller = migration.controller
+            self.qos_threshold = migration.qos_threshold
+            self.qos_window = migration.qos_window
+            self.qos_clear_margin = migration.qos_clear_margin
+            self.qos_hold_s = migration.qos_hold_s
+            self.migration_budget = migration.budget
+        if metrics is not None:
+            self.streaming_metrics = metrics.streaming
+            self.perf_reservoir_k = metrics.perf_reservoir_k
+            self.perf_sample_interval_s = metrics.perf_sample_interval_s
+            self.fixed_algo_s = metrics.fixed_algo_s
+
+    @property
+    def migration_cfg(self) -> MigrationConfig:
+        """The migration knobs as one grouped (frozen) object."""
+        return MigrationConfig(
+            interval_s=self.migration_interval_s,
+            straggler_threshold=self.straggler_threshold,
+            whatif_betas=self.whatif_betas,
+            controller=self.migration_controller,
+            qos_threshold=self.qos_threshold,
+            qos_window=self.qos_window,
+            qos_clear_margin=self.qos_clear_margin,
+            qos_hold_s=self.qos_hold_s,
+            budget=self.migration_budget,
+        )
+
+    @property
+    def metrics_cfg(self) -> MetricsConfig:
+        """The metrics knobs as one grouped (frozen) object."""
+        return MetricsConfig(
+            streaming=self.streaming_metrics,
+            perf_reservoir_k=self.perf_reservoir_k,
+            perf_sample_interval_s=self.perf_sample_interval_s,
+            fixed_algo_s=self.fixed_algo_s,
+        )
 
 
 class Simulator:
@@ -207,13 +292,13 @@ class Simulator:
         self.pending: np.ndarray = EMPTY_IDS  # non-root task ids, queue order
         self.running: np.ndarray = EMPTY_IDS  # placed task ids, start order
         self.backend = backend_for_config(config, self.topo, self.lut)
-        if config.whatif_betas and not hasattr(self.backend, "place_whatif"):
+        if config.whatif_betas and not self.backend.supports_whatif:
             raise ValueError(
                 f"whatif_betas requires a backend with a what-if axis "
                 f"(auction_windowed), got {self.backend.name!r}"
             )
         if config.migration_controller:
-            if not hasattr(self.backend, "whatif_result"):
+            if not self.backend.supports_whatif:
                 raise ValueError(
                     f"migration_controller requires a backend with a what-if "
                     f"axis (auction_windowed), got {self.backend.name!r}"
@@ -225,7 +310,7 @@ class Simulator:
                 )
         self.oracle = None
         if config.device_latency:
-            if not hasattr(self.backend, "place_whatif"):
+            if not self.backend.supports_whatif:
                 raise ValueError(
                     f"device_latency requires the windowed backend "
                     f"(auction_windowed), got {self.backend.name!r}"
@@ -665,7 +750,7 @@ class Simulator:
             migration_round
             and self.qos is not None
             and len(mover_ids)
-            and hasattr(backend, "whatif_result")
+            and backend.supports_whatif
         ):
             placement, ctrl_info = self._controller_place(
                 state, ctx, mover_ids, degraded, n_ready=len(ready_ids), t=t
@@ -678,7 +763,7 @@ class Simulator:
             migration_round
             and cfg.whatif_betas
             and len(mover_ids)
-            and hasattr(backend, "place_whatif")
+            and backend.supports_whatif
         ):
             variants = [
                 dataclasses.replace(cfg.params, beta_scale=b)

@@ -26,7 +26,10 @@ shards into the full grid, cell-for-cell identical to the single-host
 A policy axis entry may select a scheduler backend per cell with a
 ``policy:backend`` suffix — e.g. ``"nomora:mcmf"`` or
 ``"nomora:auction_host"`` (see `scheduler_backend.BACKEND_NAMES`); bare
-names keep the default backend mapping.
+names keep the default backend mapping. Cell identity is the typed
+`CellSpec` (`SweepSpec.cells()` emits them); the colon string survives
+only as `CellSpec.label` / `CellSpec.parse` and in saved-JSON
+`SweepCell.policy` fields.
 
 Results serialise to JSON (`SweepResult.to_jsonable` / `save`) so runs at
 different scales or commits stay comparable.
@@ -66,6 +69,33 @@ def _scrub(x):
 
 
 @dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """Typed identity of one sweep grid cell.
+
+    ``policy`` is the bare policy name; an explicit scheduler backend
+    (the old ``"policy:backend"`` suffix) lives in ``backend``. `label`
+    renders the legacy colon form (used in progress lines and saved
+    JSON); `parse` accepts it.
+    """
+
+    scenario: str
+    seed: int
+    policy: str
+    backend: Optional[str] = None
+
+    @property
+    def label(self) -> str:
+        """Legacy ``policy[:backend]`` string form of the policy axis."""
+        return f"{self.policy}:{self.backend}" if self.backend else self.policy
+
+    @classmethod
+    def parse(cls, scenario: str, seed: int, policy_label: str) -> "CellSpec":
+        """Build from the legacy ``policy[:backend]`` string label."""
+        base, backend = split_policy(policy_label)
+        return cls(scenario=scenario, seed=int(seed), policy=base, backend=backend)
+
+
+@dataclasses.dataclass(frozen=True)
 class SweepSpec:
     """One sweep grid: cluster shape + the (policy x seed x scenario) axes."""
 
@@ -91,11 +121,13 @@ class SweepSpec:
             slots_per_machine=self.slots_per_machine,
         )
 
-    def cells(self) -> List[Tuple[str, int, str]]:
-        """Grid order: scenario-major, then seed, then policy — workloads
-        and planes are cached at the outer levels."""
+    def cells(self) -> List[CellSpec]:
+        """Typed grid cells, scenario-major, then seed, then policy —
+        workloads and planes are cached at the outer levels. Policy-axis
+        entries may carry the legacy ``policy:backend`` suffix; it is
+        parsed into `CellSpec.backend` here."""
         return [
-            (scenario, seed, policy)
+            CellSpec.parse(scenario, seed, policy)
             for scenario in self.scenarios
             for seed in self.seeds
             for policy in self.policies
@@ -202,7 +234,12 @@ def _workload_for(spec: SweepSpec, topo: Topology, scenario: Scenario, seed: int
 
 
 def split_policy(policy: str) -> Tuple[str, Optional[str]]:
-    """Parse a ``policy`` / ``policy:backend`` cell label."""
+    """Parse a ``policy`` / ``policy:backend`` cell label.
+
+    .. deprecated:: the colon string is a legacy spelling kept for saved
+       sweeps and `SweepSpec.policies` entries; new code should carry the
+       typed `CellSpec` (whose `parse`/`label` round-trip this form).
+    """
     base, _, backend = policy.partition(":")
     return base, (backend or None)
 
@@ -233,30 +270,31 @@ def _scenario_workload(spec: SweepSpec, scenario_name: str, seed: int):
     return _workload_for(spec, spec.topology(), scenario, seed)
 
 
-def _run_cell(args: Tuple[SweepSpec, str, int, str]) -> SweepCell:
+def _run_cell(args: Tuple[SweepSpec, CellSpec]) -> SweepCell:
     """One grid cell, rebuildable in any process (multiprocessing target)."""
-    spec, scenario_name, seed, policy = args
-    scenario = get_scenario(scenario_name)
+    spec, cell = args
+    scenario = get_scenario(cell.scenario)
     topo = spec.topology()
-    plane = _scenario_plane(spec, scenario_name)
-    wl = _scenario_workload(spec, scenario_name, seed)
-    base_policy, backend = split_policy(policy)
+    plane = _scenario_plane(spec, cell.scenario)
+    wl = _scenario_workload(spec, cell.scenario, cell.seed)
     cfg = SimConfig(
-        policy=base_policy,
-        backend=backend,
+        policy=cell.policy,
+        backend=cell.backend,
         params=scenario.policy_params(),
-        seed=seed,
+        seed=cell.seed,
         fixed_algo_s=spec.fixed_algo_s,
-        **scenario.sim_config_kwargs(topo, spec.duration_s, seed),
+        **scenario.sim_config_kwargs(topo, spec.duration_s, cell.seed),
     )
     counters_before = obs.counters() if obs.enabled() else None
     t0 = time.perf_counter()
-    with obs.span("sweep.cell", scenario=scenario_name, seed=seed, policy=policy):
+    with obs.span(
+        "sweep.cell", scenario=cell.scenario, seed=cell.seed, policy=cell.label
+    ):
         metrics = Simulator(wl, plane, cfg).run()
     return SweepCell(
-        scenario=scenario_name,
-        seed=seed,
-        policy=policy,
+        scenario=cell.scenario,
+        seed=cell.seed,
+        policy=cell.label,  # saved-JSON schema keeps the string form
         summary=metrics.summary(),
         wall_s=time.perf_counter() - t0,
         telemetry=(
@@ -268,8 +306,8 @@ def _run_cell(args: Tuple[SweepSpec, str, int, str]) -> SweepCell:
 
 
 def shard_cells(
-    cells: List[Tuple[str, int, str]], shard: Tuple[int, int]
-) -> List[Tuple[str, int, str]]:
+    cells: List[CellSpec], shard: Tuple[int, int]
+) -> List[CellSpec]:
     """Deterministic contiguous slice ``i`` of an ``n``-way partition.
 
     Balanced like ``np.array_split`` (sizes differ by at most one), so
@@ -311,7 +349,7 @@ def run_sweep(
     cell_keys = spec.cells()
     if shard is not None:
         cell_keys = shard_cells(cell_keys, shard)
-    jobs = [(spec, scenario, seed, policy) for scenario, seed, policy in cell_keys]
+    jobs = [(spec, cell) for cell in cell_keys]
     cells: List[SweepCell] = []
     try:
         if workers > 1 and len(jobs) > 1:
@@ -368,7 +406,7 @@ def merge_sweep_results(results: List[SweepResult]) -> SweepResult:
         )
     ordered = sorted(results, key=lambda r: r.shard[0])
     cells = [c for r in ordered for c in r.cells]
-    keys = [(c.scenario, c.seed, c.policy) for c in cells]
+    keys = [CellSpec.parse(c.scenario, c.seed, c.policy) for c in cells]
     if keys != spec.cells():
         raise ValueError("merged cells do not reproduce the spec grid")
     return SweepResult(

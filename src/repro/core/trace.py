@@ -87,6 +87,7 @@ TERMINAL_EVENTS = (EVENT_FAIL, EVENT_FINISH, EVENT_KILL, EVENT_LOST)
 _WINDOW_TAG = 0x5772
 _STANDING_TAG = 0x57A2
 _PROBE_TAG = 0x5B0B
+_OPENLOOP_TAG = 0x0917
 
 
 def _splitmix64_int(x: int) -> int:
@@ -261,6 +262,126 @@ def synth_trace(
         window_s=window_s,
         target_utilisation=target_utilisation,
         standing_fraction=standing_fraction,
+        mix=mix,
+    )
+
+
+# --------------------------------------------------------------------- #
+# Open-loop serving cursor
+
+
+@dataclasses.dataclass
+class OpenLoopCursor:
+    """Open-loop Poisson arrival stream for the serving harness.
+
+    Unlike `SyntheticTraceCursor` — which *closes the loop* by thinning
+    arrivals to hit a slot-utilisation target — an open-loop stream offers
+    jobs at a fixed ``rate_jobs_s`` regardless of what the scheduler keeps
+    up with; that is the load model under which per-decision placement
+    latency and the saturation knee are meaningful (`core/serving.py`).
+    Per-job marginals (task counts, durations, perf mix) reuse the same
+    samplers as `synth_trace`, with durations scaled by
+    ``duration_scale`` so saturation sweeps can reach the knee on small
+    clusters without changing the distribution *shape*. Durations are NOT
+    clamped to the horizon: jobs admitted near ``duration_s`` keep their
+    natural length and drain afterwards.
+
+    Determinism matches the windowed contract: window ``w`` draws from
+    ``np.random.default_rng((seed, _OPENLOOP_TAG, w))``, so the stream is
+    a pure function of (params, window index) and replaying any sub-range
+    needs no prefix generation.
+    """
+
+    topo: Topology
+    duration_s: int  # arrival horizon: no arrivals at t >= duration_s
+    rate_jobs_s: float = 1.0
+    seed: int = 0
+    window_s: int = 60
+    duration_scale: float = 1.0
+    mix: Tuple = DEFAULT_MIX
+
+    def __post_init__(self) -> None:
+        if self.window_s <= 0:
+            raise ValueError("window_s must be positive")
+        if self.rate_jobs_s < 0:
+            raise ValueError("rate_jobs_s must be non-negative")
+
+    @property
+    def n_windows(self) -> int:
+        return -(-self.duration_s // self.window_s)
+
+    @property
+    def n_jobs_hint(self) -> int:
+        return int(self.rate_jobs_s * self.duration_s * 1.2) + 4
+
+    @property
+    def n_tasks_hint(self) -> int:
+        # E[n_tasks] of _sample_n_tasks ~ 5.5 (see SyntheticTraceCursor).
+        return max(8, int(self.n_jobs_hint * 5.5))
+
+    def _window_jobs(self, w: int) -> List[Job]:
+        lo = float(w * self.window_s)
+        hi = float(min(lo + self.window_s, self.duration_s))
+        if hi <= lo:
+            return []
+        rng = np.random.default_rng((self.seed, _OPENLOOP_TAG, w))
+        n = int(rng.poisson(self.rate_jobs_s * (hi - lo)))
+        if n == 0:
+            return []
+        arrivals = np.sort(rng.uniform(lo, hi, size=n))
+        n_tasks = _sample_n_tasks(rng, n)
+        durs = _sample_duration(rng, n)
+        perf = _sample_perf_idx(rng, n, self.mix)
+        return [
+            Job(
+                job_id=-1,
+                arrival_s=float(arrivals[i]),
+                n_tasks=int(n_tasks[i]),
+                duration_s=float(max(1.0, durs[i] * self.duration_scale)),
+                perf_idx=int(perf[i]),
+            )
+            for i in range(n)
+        ]
+
+    def windows(self) -> Iterator[Tuple[int, int, List[Job]]]:
+        """Yield ``(t_lo, t_hi, jobs)`` chunks with dense arrival-order
+        job ids (same contract as `SyntheticTraceCursor.windows`)."""
+        next_id = 0
+        for w in range(self.n_windows):
+            lo = w * self.window_s
+            hi = min(lo + self.window_s, self.duration_s)
+            with obs.span("trace.window", window=w, t_lo=lo, t_hi=hi):
+                jobs = self._window_jobs(w)
+                for job in jobs:
+                    job.job_id = next_id
+                    next_id += 1
+                obs.add("trace.jobs_streamed", len(jobs))
+            yield lo, hi, jobs
+
+    @property
+    def jobs(self) -> Iterator[Job]:
+        for _lo, _hi, jobs in self.windows():
+            yield from jobs
+
+
+def open_loop_trace(
+    topo: Topology,
+    duration_s: int,
+    rate_jobs_s: float,
+    *,
+    seed: int = 0,
+    window_s: int = 60,
+    duration_scale: float = 1.0,
+    mix=DEFAULT_MIX,
+) -> OpenLoopCursor:
+    """Fixed-rate Poisson job stream (serving-mode load generator)."""
+    return OpenLoopCursor(
+        topo=topo,
+        duration_s=duration_s,
+        rate_jobs_s=rate_jobs_s,
+        seed=seed,
+        window_s=window_s,
+        duration_scale=duration_scale,
         mix=mix,
     )
 

@@ -37,6 +37,7 @@ from .spans import (  # noqa: F401
     enabled,
     gauge,
     get,
+    jit_compiles,
     record_span,
     reset,
     scope,
@@ -59,6 +60,7 @@ __all__ = [
     "counters",
     "counters_since",
     "deterministic_counters",
+    "jit_compiles",
     "scope",
     "export",
     "NONDETERMINISTIC_PREFIXES",

@@ -309,6 +309,13 @@ def counters_since(before: Dict[str, float]) -> Dict[str, float]:
     return _telemetry.counters_since(before)
 
 
+def jit_compiles() -> float:
+    """Current ``jit.backend_compiles`` count (0.0 if telemetry is off or
+    the jit hook never fired). Serving-mode warm-path gates snapshot this
+    after warmup and assert it stays flat."""
+    return _telemetry.counters_snapshot().get("jit.backend_compiles", 0.0)
+
+
 @contextlib.contextmanager
 def scope(reset_registry: bool = True) -> Iterator[Telemetry]:
     """Temporarily enable telemetry (benchmark `telemetry` sections)."""

@@ -194,7 +194,8 @@ def test_run_sweep_workers_matches_sequential():
     seq = run_sweep(spec)
     par = run_sweep(spec, workers=2)
     keys = [(c.scenario, c.seed, c.policy) for c in par.cells]
-    assert keys == spec.cells() == [
+    grid = [(c.scenario, c.seed, c.label) for c in spec.cells()]
+    assert keys == grid == [
         (c.scenario, c.seed, c.policy) for c in seq.cells
     ]
     assert len(keys) == 8
@@ -238,7 +239,9 @@ def test_run_sweep_shard_merge_bit_identical(tmp_path):
 
     full = run_sweep(spec)
     shards = [run_sweep(spec, shard=(i, 3)) for i in range(3)]
-    assert [(c.scenario, c.seed, c.policy) for c in shards[0].cells] == parts[0]
+    assert [
+        (c.scenario, c.seed, c.policy) for c in shards[0].cells
+    ] == [(c.scenario, c.seed, c.label) for c in parts[0]]
     merged = merge_sweep_results(shards)
     assert merged.shard is None
     assert comparable(merged) == comparable(full)
@@ -270,6 +273,24 @@ def test_shard_validation_errors():
         merge_sweep_results([a, a])
     with pytest.raises(ValueError):  # unsharded input
         merge_sweep_results([run_sweep(spec)])
+
+
+def test_cellspec_typed_cells():
+    """SweepSpec.cells() emits typed CellSpecs; the legacy colon string
+    round-trips through CellSpec.parse / CellSpec.label."""
+    from repro.core.sweep import CellSpec
+
+    spec = SweepSpec(
+        policies=("nomora", "nomora:mcmf"), seeds=(0, 1), scenarios=("baseline",)
+    )
+    cells = spec.cells()
+    assert cells[0] == CellSpec("baseline", 0, "nomora", None)
+    assert cells[1] == CellSpec("baseline", 0, "nomora", "mcmf")
+    assert cells[2].seed == 1  # seed-major over policies
+    assert cells[1].label == "nomora:mcmf"
+    assert cells[0].label == "nomora"
+    for c in cells:
+        assert CellSpec.parse(c.scenario, c.seed, c.label) == c
 
 
 def test_sweep_backend_per_cell():
